@@ -1,0 +1,302 @@
+"""Analytic FLOP accounting per (arch × shape-cell).
+
+Two numbers per cell:
+
+  * ``model_flops``  — the assignment's MODEL_FLOPS: 6·N_active·D (train) or
+    2·N_active·D (serve), N_active = parameters touched per token (dense
+    non-embedding + top-k experts + head).
+  * ``impl_flops``   — what our implementation actually executes, including
+    TT staged contractions (8-18× less than dense for Table-I shapes),
+    unmasked flash attention, MoE capacity padding / TP-expert waste, full
+    rematerialization, and the optimizer.  This is the number the roofline's
+    compute term uses (exact where HLO cost_analysis undercounts scan trip
+    counts).
+
+All values are GLOBAL (whole-mesh); divide by chips for per-device.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.config import ModelConfig, ShapeCell
+from repro.configs import get_config
+from repro.models.modules import LinearSpec, linear_param_count
+
+
+@dataclass
+class CellFlops:
+    model_flops: float  # "useful" (assignment formula, TT param counts)
+    model_flops_dense: float  # dense-equivalent useful flops (6*N_dense*D)
+    impl_fwd: float  # implementation forward pass
+    impl_total: float  # full step (train: fwd+remat+bwd+loss+opt)
+    n_active: float
+    n_active_dense: float
+    notes: str = ""
+
+
+def _dense_count(spec: LinearSpec) -> int:
+    return spec.n_in * spec.n_out + (spec.n_out if spec.bias else 0)
+
+
+def _lin(spec: LinearSpec) -> float:
+    """fwd flops per token."""
+    if spec.kind == "tt":
+        return float(spec.tt.flops_per_token())
+    return 2.0 * spec.n_in * spec.n_out
+
+
+def _attn_linears(cfg, specs):
+    a = specs.attn_d() if hasattr(specs, "attn_d") else specs
+    return sum(_lin(a[k]) for k in ("wq", "wk", "wv", "wo"))
+
+
+def _block_fwd_per_token(cfg: ModelConfig, ttd_on: bool, ctx: int) -> tuple[float, float]:
+    """(impl flops, active params) per token for one block; ctx = attended
+    context length (unmasked-flash S for train/prefill, cache len for decode)."""
+    from repro.models.transformer import make_block_specs
+    specs = make_block_specs(cfg, ttd_on)
+    lin = _attn_linears(cfg, specs)
+    attn = 4.0 * ctx * cfg.n_heads * cfg.head_dim
+    active = sum(linear_param_count(dict(specs.attn)[k]) for k in ("wq", "wk", "wv", "wo"))
+    dense_p = sum(_dense_count(dict(specs.attn)[k]) for k in ("wq", "wk", "wv", "wo"))
+    if specs.moe is not None:
+        e = specs.moe["expert"]
+        per_exp = sum(_lin(s) for s in e.values())
+        per_exp_p = sum(linear_param_count(s) for s in e.values())
+        per_exp_d = sum(_dense_count(s) for s in e.values())
+        router = 2.0 * cfg.d_model * cfg.n_experts
+        # capacity/TP waste factor
+        mesh_model = 16
+        if cfg.n_experts % mesh_model == 0 or mesh_model % cfg.n_experts == 0:
+            # ep / replicated-expert ep: top-k x capacity padding
+            waste = cfg.capacity_factor * 1.1
+            experts_run = cfg.experts_per_token * waste
+        else:
+            experts_run = cfg.n_experts  # TP-expert path runs all experts
+        mlp = router + per_exp * experts_run
+        active += per_exp_p * cfg.experts_per_token + cfg.d_model * cfg.n_experts
+        dense_p += per_exp_d * cfg.experts_per_token + cfg.d_model * cfg.n_experts
+    else:
+        mlp = sum(_lin(s) for _, s in specs.mlp)
+        active += sum(linear_param_count(s) for _, s in specs.mlp)
+        dense_p += sum(_dense_count(s) for _, s in specs.mlp)
+    return lin + attn + mlp, active, dense_p
+
+
+def _rwkv_block(cfg: ModelConfig) -> tuple[float, float]:
+    from repro.models.rwkv import rwkv_specs
+    sp = rwkv_specs(cfg)
+    lin = sum(_lin(s) for s in sp["tm"].values()) + sum(_lin(s) for s in sp["cm"].values())
+    lora = 2.0 * cfg.d_model * (5 * cfg.rwkv_lora_mix * 2 + cfg.rwkv_lora_decay * 2)
+    hd = cfg.rwkv_head_dim
+    wkv = 6.0 * cfg.d_model * hd  # state update + readout per token
+    active = sum(linear_param_count(s) for s in sp["tm"].values()) + \
+        sum(linear_param_count(s) for s in sp["cm"].values())
+    dense_p = sum(_dense_count(s) for s in sp["tm"].values()) + \
+        sum(_dense_count(s) for s in sp["cm"].values())
+    return lin + lora + wkv, active, dense_p
+
+
+def _griffin_blocks(cfg: ModelConfig, ctx: int) -> tuple[float, float]:
+    """Average over the (rec, rec, attn) pattern, per token."""
+    from repro.models.griffin import rec_specs, pattern_plan
+    from repro.models.transformer import make_block_specs
+    rs = rec_specs(cfg, True)
+    w = cfg.lru_width or cfg.d_model
+    rec = sum(_lin(rs[k]) for k in ("in_x", "in_g", "gate_a", "gate_x", "out"))
+    rec += sum(_lin(s) for s in rs["mlp"].values())
+    rec += 2.0 * cfg.conv_width * w + 10.0 * w  # conv + RG-LRU elementwise
+    rec_p = sum(linear_param_count(rs[k]) for k in ("in_x", "in_g", "gate_a", "gate_x", "out")) \
+        + sum(linear_param_count(s) for s in rs["mlp"].values())
+    asp = make_block_specs(cfg, True)
+    attn = _attn_linears(cfg, asp) + 4.0 * min(ctx, cfg.window or ctx) * cfg.n_heads * cfg.head_dim
+    attn += sum(_lin(s) for _, s in asp.mlp)
+    attn_p = sum(linear_param_count(dict(asp.attn)[k]) for k in ("wq", "wk", "wv", "wo")) \
+        + sum(linear_param_count(s) for _, s in asp.mlp)
+    rec_d = sum(_dense_count(rs[k]) for k in ("in_x", "in_g", "gate_a", "gate_x", "out")) \
+        + sum(_dense_count(s) for s in rs["mlp"].values())
+    attn_d = sum(_dense_count(dict(asp.attn)[k]) for k in ("wq", "wk", "wv", "wo")) \
+        + sum(_dense_count(s) for _, s in asp.mlp)
+    n_groups, tail = pattern_plan(cfg)
+    n_rec = 2 * n_groups + len(tail)
+    n_attn = n_groups
+    total = (n_rec * rec + n_attn * attn) / cfg.n_layers
+    total_p = (n_rec * rec_p + n_attn * attn_p) / cfg.n_layers
+    total_d = (n_rec * rec_d + n_attn * attn_d) / cfg.n_layers
+    return total, total_p, total_d
+
+
+def _whisper_fwd(cfg: ModelConfig, b: int, s_dec: int) -> tuple[float, float]:
+    from repro.models.whisper import attn_specs
+    from repro.models.modules import mlp_specs
+    asp, msp = attn_specs(cfg), mlp_specs(cfg, True)
+    lin = sum(_lin(asp[k]) for k in ("wq", "wk", "wv", "wo"))
+    mlp = sum(_lin(s) for s in msp.values())
+    enc_tok = lin + mlp + 4.0 * cfg.enc_len * cfg.n_heads * cfg.head_dim
+    dec_tok = 2 * lin + mlp + 4.0 * (s_dec + cfg.enc_len) * cfg.n_heads * cfg.head_dim
+    total = b * (cfg.n_enc_layers * cfg.enc_len * enc_tok + cfg.n_layers * s_dec * dec_tok)
+    # decoder active params per token: self+cross attn + mlp
+    p = cfg.n_layers * (2 * sum(linear_param_count(asp[k]) for k in asp) +
+                        sum(linear_param_count(s) for s in msp.values()))
+    d = cfg.n_layers * (2 * sum(_dense_count(asp[k]) for k in asp) +
+                        sum(_dense_count(s) for s in msp.values()))
+    return total, p, d
+
+
+def cell_flops(arch: str, cell: ShapeCell) -> CellFlops:
+    cfg = get_config(arch)
+    b, s = cell.global_batch, cell.seq_len
+    head = 2.0 * cfg.d_model * cfg.vocab_size  # per token
+    notes = []
+
+    if cell.kind == "train":
+        tokens, ctx = b * s, s
+    elif cell.kind == "prefill":
+        tokens, ctx = b * s, s
+    else:
+        tokens, ctx = b * 1, min(s, cfg.window) if cfg.window else s
+
+    if cfg.family == "encdec":
+        s_dec = s if cell.kind != "decode" else 1
+        fwd, p_blocks, d_blocks = _whisper_fwd(cfg, b, s_dec)
+        fwd += b * s_dec * head
+        n_active = p_blocks + cfg.d_model * cfg.vocab_size
+        n_dense = d_blocks + cfg.d_model * cfg.vocab_size
+        tokens = b * s_dec
+    else:
+        per_tok = 0.0
+        n_active = 0.0
+        n_dense = 0.0
+        if cfg.family == "rwkv":
+            blk, p, dp = _rwkv_block(cfg)
+            per_tok, n_active, n_dense = cfg.n_layers * blk, cfg.n_layers * p, cfg.n_layers * dp
+        elif cfg.family == "griffin":
+            blk, p, dp = _griffin_blocks(cfg, ctx)
+            per_tok, n_active, n_dense = cfg.n_layers * blk, cfg.n_layers * p, cfg.n_layers * dp
+        else:
+            from repro.models.transformer import segment_plan
+            for n, ttd_on in segment_plan(cfg):
+                blk, p, dp = _block_fwd_per_token(cfg, ttd_on, ctx)
+                per_tok += n * blk
+                n_active += n * p
+                n_dense += n * dp
+        per_tok += head
+        n_active += cfg.d_model * cfg.vocab_size
+        n_dense += cfg.d_model * cfg.vocab_size
+        fwd = tokens * per_tok
+
+    if cell.kind == "train":
+        # fwd + remat-recompute fwd + backward 2x + optimizer
+        n_params = n_active  # proxy; optimizer cost ~10 flops/param
+        impl_total = 4.0 * fwd + 10.0 * n_params
+        model = 6.0 * n_active * tokens
+        model_d = 6.0 * n_dense * tokens
+        notes.append("train: impl=4x fwd (full remat) + opt")
+    else:
+        impl_total = fwd
+        model = 2.0 * n_active * tokens
+        model_d = 2.0 * n_dense * tokens
+    return CellFlops(model_flops=model, model_flops_dense=model_d,
+                     impl_fwd=fwd, impl_total=impl_total,
+                     n_active=n_active, n_active_dense=n_dense,
+                     notes="; ".join(notes))
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic and collective-traffic models (per device, per step).
+#
+# XLA-CPU's "bytes accessed" counts every HLO op's operands (no TPU-style
+# fusion) and counts scan bodies once — so it both over-counts elementwise
+# chains and under-counts depth.  These analytic models are the primary
+# roofline source; coarse but transparent:
+#
+# HBM bytes (train) ~ 3x param shard (fwd gather + bwd regather + update)
+#                   + 3x optimizer state shard (read m,v / write)
+#                   + remat carry stack x3 (save, reload, recompute-write)
+#                   + per-layer activation working set x L x 4
+# HBM bytes (decode) ~ param shard + KV-cache shard + activations
+# collectives (train) ~ FSDP gathers + grad reduce-scatter/all-gather
+#                   + SP/TP activation reshards per block + EP all_to_all
+# ---------------------------------------------------------------------------
+CHIPS_DEFAULT = 256
+MESH_DATA, MESH_MODEL = 16, 16
+
+
+def _param_bytes(cfg, serve: bool) -> float:
+    """Global parameter bytes under the cell's parameterization."""
+    from repro.core.compress import compression_report
+    if cfg.family in ("dense", "moe"):
+        rep = compression_report(cfg)
+        blocks_bits = (rep.n_tt_blocks * rep.block_bits_comp
+                       + (rep.n_blocks - rep.n_tt_blocks) * rep.block_bits_dense)
+        emb_bits = rep.embed_params * 16
+        return (blocks_bits + emb_bits) / 8.0
+    # other families: count from eval_shape-free param math (approx: dense)
+    import jax
+    from repro.models import get_model
+    shapes = jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+    return float(sum(math.prod(x.shape) * (2 if serve or cfg.param_dtype == "bfloat16" else 4)
+                     for x in jax.tree.leaves(shapes)))
+
+
+def cell_traffic(arch: str, cell: ShapeCell, chips: int = CHIPS_DEFAULT):
+    """(hbm_bytes_per_device, collective_bytes_per_device) analytic."""
+    from repro.launch.dryrun import arch_cell_config
+    cfg = arch_cell_config(arch, cell)
+    serve = cell.kind != "train"
+    b, s = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    act_bytes = 2  # bf16 activations
+    p_global = _param_bytes(cfg, serve)
+
+    if cell.kind == "train":
+        p_dev = p_global / chips  # FSDP x TP sharded
+        carries = cfg.n_layers * (b / MESH_DATA) * (s / MESH_MODEL) * d * act_bytes
+        # per-layer working set touched ~4x (fwd, remat, bwd dgrad, bwd wgrad)
+        work = cfg.n_layers * 4 * (b * s / chips) * d * 8 * act_bytes
+        hbm = 3 * p_dev + 3 * 2 * p_dev + 3 * carries + work
+        # collectives: FSDP gathers (2x per step over the data axis) + grad RS
+        fsdp = 3 * p_global / MESH_MODEL / MESH_DATA * (MESH_DATA - 1)
+        # SP/TP reshard per block: fwd 2 hops + bwd 2 hops of (B,S,D)/devices
+        act_coll = cfg.n_layers * 4 * (b * s / chips) * d * act_bytes
+        coll = fsdp + act_coll
+        if cfg.family in ("griffin", "rwkv"):
+            # temporal blocks gather the full sequence per device (recurrence
+            # needs seq-local data): 2 tensors x (fwd+bwd) x (g-1)/g
+            w = cfg.lru_width or d if cfg.family == "griffin" else d
+            n_rec = (cfg.n_layers * 2 // 3) if cfg.family == "griffin" else cfg.n_layers
+            gather = n_rec * 4 * (b / MESH_DATA) * s * w * act_bytes * (MESH_MODEL - 1) / MESH_MODEL
+            coll += gather
+            hbm += gather  # the gathered copies are read/written
+        if cfg.family == "moe":
+            tokens_dev = b * s / chips
+            a2a = cfg.n_layers * 3 * tokens_dev * cfg.experts_per_token * \
+                cfg.capacity_factor * d * act_bytes
+            coll += a2a
+            hbm += a2a  # dispatch buffers are materialized
+    elif cell.kind == "prefill":
+        p_dev = p_global / MESH_MODEL
+        work = cfg.n_layers * (b * s / chips) * d * 6 * act_bytes
+        hbm = p_dev + work
+        coll = cfg.n_layers * 2 * (b * s / chips) * d * act_bytes
+    else:  # decode
+        p_dev = p_global / MESH_MODEL
+        cache_dtype = 2
+        if cfg.family == "rwkv":
+            cache_dev = cfg.n_layers * (b / MESH_DATA) * d * cfg.rwkv_head_dim * 4 / MESH_MODEL
+        elif cfg.family == "griffin":
+            win = min(cfg.window or s, s)
+            n_attn = cfg.n_layers // 3
+            cache_dev = n_attn * 2 * (b / MESH_DATA) * win * cfg.n_kv_heads * cfg.head_dim * cache_dtype / MESH_MODEL \
+                + cfg.n_layers * (b / MESH_DATA) * (cfg.lru_width or d) * 4
+        else:
+            win = min(cfg.window or s, s)
+            kv_feat = max(cfg.n_kv_heads * cfg.head_dim / MESH_MODEL, cfg.head_dim / MESH_MODEL)
+            layers = cfg.n_layers * (2 if cfg.family == "encdec" else 1)
+            cache_dev = layers * 2 * (b / MESH_DATA) * win * kv_feat * cache_dtype
+        hbm = p_dev + cache_dev + (b / MESH_DATA) * d * cfg.n_layers * 4 * act_bytes
+        coll = cfg.n_layers * 2 * (b / max(MESH_DATA, 1)) * d * act_bytes * 2
+        if cfg.family == "moe":  # ep_psum: one psum of (B,D) per layer
+            coll += cfg.n_layers * 2 * (b / MESH_DATA) * d * act_bytes
+    return hbm, coll

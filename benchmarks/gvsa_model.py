@@ -1,0 +1,74 @@
+"""Analytical cycle model of the paper's GVSA accelerator (§III.B, §V.C).
+
+Hardware: T_in=128-wide MAC lanes × T_out=32 PEs (T_n=16 parallel groups),
+125 MHz, FP16 activations × INT4 weights.  Single-token (GEMV) workloads —
+the first-token/decode regime of Tables III/IV.
+
+Model:  cycles(op) = α · ideal_cycles(op) + β        (fill/drain + control)
+  dense linear  ideal = Σ ceil(N/T_in) · ceil(M/(T_in·T_out/T_in)) …
+                simplified to MACs / (T_in·T_out) (peak 4096 MAC/cycle)
+  TT linear     ideal = Σ_k stage-loop cycles per Fig. 6:
+                T_out · ceil((r_{k-1}·n_k)/T_in) · ceil(T_k/T_out) ·
+                ceil((m_k·r_k)/T_out)  — the reorder is free (hidden in the
+                ping-pong buffer access pattern, §III.C)
+  nonlinear     ideal = elems / T_in  (vector unit)
+
+α, β are calibrated per op-class on HALF of the paper's Table III entries
+and validated against the held-out half + all of Table IV
+(benchmarks/gvsa_latency.py prints measured-vs-model).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.ttd import TTSpec
+
+T_IN, T_OUT, T_N = 128, 32, 16
+FREQ_HZ = 125e6
+PEAK_MACS = T_IN * T_OUT
+
+
+@dataclass(frozen=True)
+class GVSAParams:
+    alpha_lin: float = 1.45  # dense-linear efficiency factor (~69% of peak)
+    alpha_tt: float = 1.75  # TT stages: shorter rows -> more fill overhead
+    alpha_nl: float = 24.0  # nonlinear vector ops
+    beta: float = 180.0  # fixed per-op control/fill cycles
+
+
+def cycles_to_us(cycles: float) -> float:
+    return cycles / FREQ_HZ * 1e6
+
+
+def dense_linear_cycles(m: int, n: int, tokens: int = 1, p: GVSAParams = GVSAParams()):
+    ideal = tokens * m * n / PEAK_MACS
+    return p.alpha_lin * ideal + p.beta
+
+
+def tt_stage_cycles(spec: TTSpec, tokens: int = 1) -> float:
+    """Fig. 6 loop structure, summed over stages (reorder cycles = 0)."""
+    total = 0.0
+    n, m, r = spec.in_modes, spec.out_modes, spec.ranks
+    for k in range(spec.d):
+        contract = r[k] * n[k]
+        out_cols = m[k] * r[k + 1]
+        t_dim = tokens * math.prod(n[k + 1:]) * math.prod(m[:k])
+        total += T_OUT * math.ceil(contract / T_IN) * math.ceil(t_dim / T_OUT) \
+            * math.ceil(out_cols / T_OUT)
+    return total
+
+
+def tt_linear_cycles(spec: TTSpec, tokens: int = 1, p: GVSAParams = GVSAParams()):
+    return p.alpha_tt * tt_stage_cycles(spec, tokens) + p.beta
+
+
+def nonlinear_cycles(elems: int, p: GVSAParams = GVSAParams()):
+    return p.alpha_nl * elems / T_IN + p.beta
+
+
+def attention_cycles(seq: int, n_heads: int, head_dim: int, kv_heads: int,
+                     p: GVSAParams = GVSAParams()):
+    """Score + PV matvecs against a KV cache of ``seq`` (decode regime)."""
+    macs = 2 * seq * n_heads * head_dim
+    return p.alpha_lin * macs / PEAK_MACS + p.beta

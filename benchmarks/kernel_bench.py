@@ -1,0 +1,55 @@
+"""Kernel-level microbenchmarks (CPU wall-time, structural comparison).
+
+Compares the per-call cost of: dense matmul vs staged TT contraction (the
+pure-JAX path the dry-run lowers) for the paper's layer shapes.  On CPU,
+times track FLOPs, so the TT FLOP reduction (8-18x for Table-I shapes) shows
+directly; the Pallas kernel's VMEM behaviour can't be timed here (interpret
+mode is Python) and is validated for correctness in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tt_linear import init_tt_linear, tt_linear_apply
+from repro.core.ttd import TTSpec
+
+SHAPES = [
+    ("chatglm_O", 4096, 4096, (16, 8, 8, 4), (4, 8, 8, 16)),
+    ("chatglm_mlp", 4096, 13696, (8, 8, 8, 8), (4, 4, 8, 107)),
+    ("llama_mlp_dn", 11008, 4096, (43, 16, 4, 4), (4, 8, 8, 16)),
+]
+
+
+def _time(f, *args, iters=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(report=print, batch=64):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for name, n, m, nm, mm in SHAPES:
+        spec = TTSpec.make(n, m, 16, in_modes=nm, out_modes=mm)
+        params = init_tt_linear(key, spec, jnp.float32)
+        w = jax.random.normal(key, (n, m), jnp.float32)
+        x = jax.random.normal(key, (batch, n), jnp.float32)
+        f_tt = jax.jit(lambda x: tt_linear_apply(params, x, spec))
+        f_dense = jax.jit(lambda x: x @ w)
+        us_tt = _time(f_tt, x)
+        us_dense = _time(f_dense, x)
+        flop_ratio = (2 * n * m) / spec.flops_per_token()
+        report(f"{name:14s} B={batch}: dense {us_dense:9.1f}us  tt {us_tt:9.1f}us "
+               f"speedup {us_dense/us_tt:5.2f}x (flop ratio {flop_ratio:5.2f}x)")
+        rows.append((name, us_dense, us_tt, flop_ratio))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,89 @@
+"""Accuracy-degradation analogue of the paper's Table I quality rows
+("Score Decrease 4.21" on C-EVal / "PPL Increase 2.62" on C4).
+
+Real C-EVal/C4 + pretrained 6-7B weights aren't available in this container,
+so we run the same *pipeline* at laptop scale: pretrain a small dense LM on
+the synthetic stream, TT-SVD-compress its linears at several ranks (paper
+recipe: attn-O + MLP), and report the held-out PPL delta vs rank — the
+compression/accuracy trade-off curve the paper's rank-16 point sits on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import QuantConfig, TrainConfig, TTDConfig
+from repro.configs import get_config
+from repro.core.compress import compress_model, compression_report
+from repro.data.pipeline import DataConfig, make_source
+from repro.models import get_model
+from repro.train.losses import chunked_cross_entropy
+from repro.train.step import build_train_step, init_train_state
+
+
+def _eval_ppl(model, params, src, steps=8, start=10_000):
+    tot, cnt = 0.0, 0.0
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in src.batch(start + i).items()}
+        hidden, _ = model.forward(params, b)
+        loss, m = chunked_cross_entropy(hidden, model.head_weight(params),
+                                        b["targets"], b["loss_mask"])
+        tot += float(m["ce"]) * float(m["tokens"])
+        cnt += float(m["tokens"])
+    return float(np.exp(tot / cnt))
+
+
+def _finetune(cfg_t, params_t, steps, src, seed=1):
+    """Brief post-compression fine-tune of the TT cores (standard TTD
+    practice; exercises TT-as-trainable-parameters)."""
+    model_t = get_model(cfg_t)
+    tc = TrainConfig(global_batch=8, seq_len=64, lr=1e-3, warmup_steps=5,
+                     total_steps=steps, optimizer="adamw", remat="none")
+    from repro.optim import init_optimizer
+    from repro.train.step import TrainState
+    state = TrainState(params_t, init_optimizer("adamw", params_t),
+                       jnp.zeros((), jnp.int32))
+    step = jax.jit(build_train_step(model_t, tc))
+    for i in range(steps):
+        state, _ = step(state, {k: jnp.asarray(v) for k, v in src.batch(20_000 + i).items()})
+    return state.params
+
+
+def run(report=print, train_steps=120, ranks=(2, 4, 8, 16), ft_steps=60):
+    cfg_d = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32",
+        ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
+    model_d = get_model(cfg_d)
+    tc = TrainConfig(global_batch=8, seq_len=64, lr=3e-3, warmup_steps=10,
+                     total_steps=train_steps, optimizer="adamw", remat="none")
+    state = init_train_state(model_d, tc, jax.random.PRNGKey(0))
+    step = jax.jit(build_train_step(model_d, tc))
+    src = make_source(DataConfig(vocab_size=cfg_d.vocab_size, seq_len=64,
+                                 global_batch=8, seed=0))
+    for i in range(train_steps):
+        state, _ = step(state, {k: jnp.asarray(v) for k, v in src.batch(i).items()})
+
+    base_ppl = _eval_ppl(model_d, state.params, src)
+    report(f"dense baseline PPL: {base_ppl:.3f}")
+    rows = [("dense", 1.0, base_ppl, 0.0)]
+    for r in ranks:
+        cfg_t = cfg_d.replace(ttd=TTDConfig(enabled=True, rank=r, d=3))
+        model_t = get_model(cfg_t)
+        params_t = compress_model(state.params, cfg_d, cfg_t, svd_method="svd")
+        ppl = _eval_ppl(model_t, params_t, src)
+        rep = compression_report(cfg_t)
+        line = (f"rank {r:3d}: block CR={rep.block_cr:6.2f}  PPL={ppl:8.3f} "
+                f"(+{ppl - base_ppl:.3f})")
+        if r >= 8 and ft_steps:
+            params_ft = _finetune(cfg_t, params_t, ft_steps, src)
+            ppl_ft = _eval_ppl(model_t, params_ft, src)
+            line += f"  after {ft_steps}-step finetune: PPL={ppl_ft:8.3f} (+{ppl_ft - base_ppl:.3f})"
+            ppl = ppl_ft
+        report(line)
+        rows.append((f"tt_rank{r}", rep.block_cr, ppl, ppl - base_ppl))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,177 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape-cell) on the single-pod 16×16 mesh:
+
+    t_compute    = FLOPs / (chips · 197e12)          [TPU v5e bf16 peak]
+    t_memory     = HBM bytes / (chips · 819e9)
+    t_collective = link bytes / (chips-normalized 50e9 per link)
+
+Sources, in order of trust:
+  * FLOPs: analytic model (benchmarks/flops_model.py) — exact; the HLO
+    cost_analysis numbers (raw + depth-delta corrected) are cross-checks,
+    because XLA counts scan bodies once regardless of trip count
+    (demonstrated in EXPERIMENTS.md §Methodology).
+  * bytes: depth-delta-corrected HLO "bytes accessed" (per-device).
+  * collective bytes: depth-delta-corrected, ring-traffic-weighted per-op
+    sums parsed from the post-SPMD HLO (launch/dryrun.py).
+
+MODEL_FLOPS ratio = model_flops / impl_flops — how much compiled compute is
+"useful" (catches remat, capacity padding, unmasked-attention waste).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.config import SHAPE_CELLS, shape_cell
+from repro.configs import ALL_ARCHS, get_config
+
+from .flops_model import cell_flops, cell_traffic
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+LINK_BW = 50e9  # B/s / link
+CHIPS = 256
+
+SEG_COUNTS = {  # how many of each probe-delta unit the full model has
+    # family-style plans resolved per arch below
+}
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    cell: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops: float
+    impl_flops: float
+    flops_hlo_raw: float
+    flops_hlo_corrected: float
+    bytes_corrected: float
+    coll_corrected: float
+    mfu_bound: float
+    mfu_dense_equiv: float = 0.0
+    skipped: str | None = None
+
+
+def _probe_extrapolate(arch: str, rec: dict, probes: dict, mb: int):
+    """total = base + Σ n_seg · Δ_seg for flops/bytes/coll."""
+    cfg = get_config(arch)
+    p = probes["probes"] if probes else None
+
+    def field(tag, name):
+        return p[tag][name]
+
+    def combine(name, raw_value):
+        if p is None:
+            return raw_value
+        fam = cfg.family
+        try:
+            if fam == "encdec":
+                d_enc = field("e2d1", name) - field("e1d1", name)
+                d_dec = field("e1d2", name) - field("e1d1", name)
+                base = field("e1d1", name) - d_enc - d_dec
+                tot = base + cfg.n_enc_layers * d_enc + cfg.n_layers * d_dec
+            elif fam == "griffin":
+                d_grp = field("g2", name) - field("g1", name)
+                d_rec = field("g1r1", name) - field("g1", name)
+                base = field("g1", name) - d_grp
+                n_groups = cfg.n_layers // 3
+                tail = cfg.n_layers - 3 * n_groups
+                tot = base + n_groups * d_grp + tail * d_rec
+            elif "d1" in p:  # two-segment transformer
+                dd = field("d2", name) - field("d1", name)
+                dt = field("t2", name) - field("t1", name)
+                base = field("d1", name) - dd
+                ft = cfg.ttd.first_tt_block
+                tot = base + ft * dd + (cfg.n_layers - ft) * dt
+            else:
+                dl = field("L2", name) - field("L1", name)
+                base = field("L1", name) - dl
+                tot = base + cfg.n_layers * dl
+            return max(tot, raw_value) * 1.0
+        except KeyError:
+            return raw_value
+
+    flops_c = combine("flops", rec.get("flops", 0.0)) * mb
+    bytes_c = combine("bytes", rec.get("bytes_accessed", 0.0)) * mb
+    coll_c = combine("coll", rec.get("collectives", {}).get("total", 0.0)) * mb
+    return flops_c, bytes_c, coll_c
+
+
+def load_cell(dry_dir: Path, arch: str, cell_name: str) -> CellRoofline | None:
+    f = dry_dir / f"{arch}_{cell_name}_16x16.json"
+    if not f.exists():
+        return None
+    rec = json.loads(f.read_text())
+    if "skipped" in rec:
+        return CellRoofline(arch, cell_name, 0, 0, 0, "-", 0, 0, 0, 0, 0, 0, 0,
+                            skipped=rec["skipped"])
+    pf = dry_dir / f"{arch}_{cell_name}_16x16_probes.json"
+    probes = json.loads(pf.read_text()) if pf.exists() else None
+    mb = rec.get("microbatches", 1)
+    flops_c, bytes_c, coll_c = _probe_extrapolate(arch, rec, probes, mb)
+
+    cf = cell_flops(arch, shape_cell(cell_name))
+    impl = cf.impl_total  # global
+    hbm_a, coll_a = cell_traffic(arch, shape_cell(cell_name))
+    t_comp = impl / (CHIPS * PEAK_FLOPS)
+    # analytic traffic is primary; HLO numbers are kept as cross-checks
+    t_mem = hbm_a / HBM_BW
+    t_coll = coll_a / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    t_model = cf.model_flops / (CHIPS * PEAK_FLOPS)
+    mfu_bound = t_model / max(max(terms.values()), 1e-12)
+    t_model_d = cf.model_flops_dense / (CHIPS * PEAK_FLOPS)
+    mfu_dense_equiv = t_model_d / max(max(terms.values()), 1e-12)
+    return CellRoofline(
+        arch=arch, cell=cell_name, t_compute=t_comp, t_memory=t_mem,
+        t_collective=t_coll, dominant=dom, model_flops=cf.model_flops,
+        impl_flops=impl, flops_hlo_raw=rec.get("flops", 0.0) * CHIPS,
+        flops_hlo_corrected=flops_c * CHIPS, bytes_corrected=bytes_c,
+        coll_corrected=coll_c, mfu_bound=mfu_bound,
+        mfu_dense_equiv=mfu_dense_equiv)
+
+
+def run(report=print, dry_dir="experiments/dryrun", csv_out="experiments/roofline.csv"):
+    dry_dir = Path(dry_dir)
+    rows = []
+    csv_lines = ["arch,cell,t_compute,t_memory,t_collective,dominant,"
+                 "model_flops,impl_flops,hlo_flops_raw,hlo_flops_corrected,"
+                 "hlo_bytes_corrected,hlo_coll_corrected,mfu_bound,mfu_dense_equiv,skipped"]
+    report(f"{'arch':<18s} {'cell':<12s} {'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+           f"{'dominant':>10s} {'MF/impl':>8s} {'MFU_bound':>9s} {'MFU_dense':>9s}")
+    for arch in ALL_ARCHS:
+        for cell in SHAPE_CELLS:
+            r = load_cell(dry_dir, arch, cell.name)
+            if r is None:
+                continue
+            if r.skipped:
+                report(f"{arch:<18s} {cell.name:<12s} {'SKIP':>9s}  ({r.skipped[:60]})")
+                rows.append(r)
+                csv_lines.append(f"{r.arch},{r.cell},,,,,,,,,,,,,{r.skipped}")
+                continue
+            ratio = r.model_flops / max(r.impl_flops, 1)
+            report(f"{arch:<18s} {cell.name:<12s} {r.t_compute:9.4f} {r.t_memory:9.4f} "
+                   f"{r.t_collective:9.4f} {r.dominant:>10s} {ratio:8.2f} "
+                   f"{r.mfu_bound:9.3f} {r.mfu_dense_equiv:9.3f}")
+            rows.append(r)
+            csv_lines.append(
+                f"{r.arch},{r.cell},{r.t_compute:.6f},{r.t_memory:.6f},"
+                f"{r.t_collective:.6f},{r.dominant},{r.model_flops:.4e},"
+                f"{r.impl_flops:.4e},{r.flops_hlo_raw:.4e},{r.flops_hlo_corrected:.4e},"
+                f"{r.bytes_corrected:.4e},{r.coll_corrected:.4e},"
+                f"{r.mfu_bound:.4f},{r.mfu_dense_equiv:.4f},")
+    if csv_out:
+        Path(csv_out).parent.mkdir(parents=True, exist_ok=True)
+        Path(csv_out).write_text("\n".join(csv_lines))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

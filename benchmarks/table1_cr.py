@@ -1,0 +1,40 @@
+"""Reproduce paper Table I: per-layer / per-block / whole-network CRs."""
+from __future__ import annotations
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.core.compress import compression_report
+
+PAPER = {
+    "chatglm3-6b": {"block": 10.72, "network": 1.94,
+                    "roles": {"wo": 481.88, "gate": 1446.44, "up": 1446.44,
+                              "down": 1446.44}},
+    "llama2-7b": {"block": 4.01, "network": 1.60,
+                  "roles": {"wo": 481.88, "gate": 1233.82, "up": 1233.82,
+                            "down": 1007.89}},
+}
+
+
+def run(report=print):
+    rows = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        if cfg.family not in ("dense", "moe"):
+            continue
+        rep = compression_report(cfg)
+        paper = PAPER.get(arch, {})
+        report(f"== {arch}: block CR={rep.block_cr:.2f}"
+               + (f" (paper {paper['block']})" if paper else "")
+               + f"  network CR={rep.network_cr:.2f}"
+               + (f" (paper {paper['network']})" if paper else "")
+               + f"  net+embed={rep.network_cr_with_embed:.3f}"
+               + f"  bits-CR={rep.network_cr_bits:.2f}")
+        for r in rep.roles:
+            p = paper.get("roles", {}).get(r.role)
+            report(f"   {r.role:14s} {r.kind:5s} {r.n_in}x{r.n_out:<7d} CR={r.cr:9.2f}"
+                   + (f" (paper {p})" if p else ""))
+        rows.append((arch, rep.block_cr, rep.network_cr))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Serve a small TT-compressed model with continuous batching.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Eight requests with different prompt lengths share 3 decode slots; finished
+requests free slots for queued ones mid-flight (the engine's scheduling is
+the same shape as a production continuous-batching server).
+"""
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, slots=3, max_len=96)
+
+    prompts = [[1 + i, 2, 3 + i] + list(range(4, 4 + i)) for i in range(8)]
+    reqs = [engine.submit(p, max_tokens=12) for p in prompts]
+    t0 = time.time()
+    done = engine.run()
+    dt = time.time() - t0
+    total_toks = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests / {total_toks} tokens in {dt:.2f}s "
+          f"({total_toks / dt:.1f} tok/s on CPU, 3 slots)")
+    for r in done[:4]:
+        print(f"  req {r.rid}: prompt_len={len(r.prompt)} -> {r.out_tokens}")
+    assert len(done) == len(prompts)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .store import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,224 @@
+"""Configuration system: model / TTD / quant / parallelism / train / serve.
+
+Everything is a frozen dataclass so configs are hashable static arguments to
+jitted step builders.  Architecture files in ``repro/configs`` construct
+``ModelConfig`` instances; launchers layer ``RunConfig`` on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+
+# ---------------------------------------------------------------------------
+# Paper technique configs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TTLayerOverride:
+    """Explicit per-role factorization (paper Table I rows)."""
+
+    in_modes: tuple[int, ...]
+    out_modes: tuple[int, ...]
+    rank: int = 16
+
+
+@dataclass(frozen=True)
+class TTDConfig:
+    """Which linear roles get TT-compressed and how (paper §II.D, Table I).
+
+    The paper's recipe: compress attn output + all MLP linears, keep Q/K/V
+    dense; d=4, rank=16.  ``overrides`` pins exact factorizations per role.
+    """
+
+    enabled: bool = False
+    rank: int = 16
+    d: int = 4
+    roles: tuple[str, ...] = (
+        "attn_o",
+        "mlp_gate",
+        "mlp_up",
+        "mlp_down",
+        "expert_gate",
+        "expert_up",
+        "expert_down",
+        "cm_key",
+        "cm_value",
+        "tm_out",
+        "lru_in",
+        "lru_out",
+    )
+    overrides: tuple[tuple[str, TTLayerOverride], ...] = ()
+    # fraction of blocks compressed, from the end (paper: 15/28 and 19/32,
+    # chosen blocks are TT'd, the rest stay dense/quant-only)
+    first_tt_block: int = 0  # blocks [first_tt_block, n_layers) are TT'd
+
+    def override_for(self, role: str) -> TTLayerOverride | None:
+        return dict(self.overrides).get(role)
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """INT4 weight-only quantization (paper: Wt INT4 / Act FP16)."""
+
+    enabled: bool = False
+    bits: int = 4
+    group_size: int = 128
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | rwkv | griffin | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    d_ff_expert: int = 0
+    moe_impl: str = "ep"  # "ep" (sort + all_to_all expert parallel) | "dense"
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- attention / positions ---
+    rope_theta: float = 10000.0
+    window: int = 0  # sliding-window size, 0 = full attention
+    qkv_bias: bool = False
+    pos_type: str = "rope"  # rope | mrope | learned | none
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    partial_rotary: float = 1.0
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    act: str = "swiglu"  # swiglu | geglu | gelu_mlp
+    tie_embeddings: bool = False
+    max_seq_len: int = 32768
+
+    # --- griffin (RG-LRU) ---
+    lru_width: int = 0
+    conv_width: int = 4
+    pattern: tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+
+    # --- rwkv ---
+    rwkv_head_dim: int = 64
+    rwkv_lora_decay: int = 64
+    rwkv_lora_mix: int = 32
+
+    # --- encoder-decoder ---
+    n_enc_layers: int = 0
+    enc_len: int = 1500
+
+    # --- compression (the paper's technique) ---
+    ttd: TTDConfig = field(default_factory=TTDConfig)
+    quant: QuantConfig = field(default_factory=QuantConfig)
+
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # --- attention blocking (pure-JAX flash) ---
+    q_block: int = 1024
+    kv_block: int = 1024
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / run configs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MeshConfig:
+    """Logical mesh.  ``data`` composes with ``pod`` for DP; ``model`` is the
+    TP/EP/SP axis.  FSDP (ZeRO-3 param sharding) uses ``data`` within a pod."""
+
+    data: int = 16
+    model: int = 16
+    pods: int = 1
+    fsdp: bool = True  # shard params/optstate over the data axis too
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return (
+            (self.pods, self.data, self.model)
+            if self.pods > 1
+            else (self.data, self.model)
+        )
+
+    @property
+    def n_devices(self) -> int:
+        return self.pods * self.data * self.model
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatches: int = 1  # gradient accumulation steps inside train_step
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"  # adamw | adafactor
+    remat: str = "full"  # full | dots | none
+    grad_compression: str = "none"  # none | int8 (cross-pod hop)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 128
+    max_seq_len: int = 32768
+    prefill_chunk: int = 0  # 0 = single-shot prefill
+    cache_dtype: str = "bfloat16"
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One assigned (shape) cell: what the dry-run lowers."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPE_CELLS: tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", "train", 4096, 256),
+    ShapeCell("prefill_32k", "prefill", 32768, 32),
+    ShapeCell("decode_32k", "decode", 32768, 128),
+    ShapeCell("long_500k", "decode", 524288, 1),
+)
+
+
+def shape_cell(name: str) -> ShapeCell:
+    for c in SHAPE_CELLS:
+        if c.name == name:
+            return c
+    raise KeyError(name)

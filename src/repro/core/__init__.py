@@ -1,0 +1,30 @@
+"""Core of the reproduction: Tensor-Train decomposition of LLM linear layers
+(paper SII) + staged-contraction inference (paper SIII) + INT4 quantization
+and the whole-model compression pipeline (paper SV.A)."""
+
+from .ttd import (  # noqa: F401
+    TTSpec,
+    factorize,
+    tt_svd,
+    tt_reconstruct,
+    tt_params,
+    compression_ratio,
+    cores_to_matrices,
+    matrices_to_cores,
+    tensorize_weight,
+    untensorize_weight,
+)
+from .tt_linear import (  # noqa: F401
+    tt_linear_apply,
+    init_tt_linear,
+    tt_linear_from_dense,
+    tt_stage_shapes,
+)
+from .quant import (  # noqa: F401
+    quantize_int4,
+    dequantize_int4,
+    int4_matmul_ref,
+    fake_quant_int4,
+    pack_int4,
+    unpack_int4,
+)

@@ -1,0 +1,226 @@
+"""Whole-model compression pipeline (the paper's §V.A recipe).
+
+``compress_model(dense_params, dense_cfg, target_cfg)`` converts a trained
+dense checkpoint into the target config's parameterization:
+
+  * linears whose target spec is ``tt``   -> TT-SVD cores (Algorithm 1)
+  * linears whose target spec is ``int4`` -> packed int4 + per-group scales
+  * everything else                       -> copied
+
+``compression_report(cfg)`` computes Table-I-style CR accounting (per layer
+role / per block / whole network, in parameter counts and in storage bits)
+without needing any weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..models.modules import LinearSpec, linear_param_bits, linear_param_count
+from .quant import quantize_int4
+from .ttd import TTSpec, cores_to_matrices, tt_svd
+
+
+# ---------------------------------------------------------------------------
+# Weight conversion
+# ---------------------------------------------------------------------------
+def _convert_linear(p_dense: dict[str, Any], spec: LinearSpec, svd_method: str):
+    """p_dense: {"w": (..., n_in, n_out)[, "b"]} -> target params subtree."""
+    w = np.asarray(p_dense["w"], dtype=np.float32)
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    out: dict[str, Any] = {}
+    if spec.kind == "dense":
+        out["w"] = jnp.asarray(w)
+    elif spec.kind == "tt":
+        per_core: list[list[np.ndarray]] = [[] for _ in range(spec.tt.d)]
+        for i in range(flat.shape[0]):
+            cores3d = tt_svd(flat[i].T, spec.tt, method=svd_method)  # (M,N) layout
+            mats = cores_to_matrices(cores3d, spec.tt)
+            for k, m in enumerate(mats):
+                per_core[k].append(np.asarray(m, np.float32))
+        cores = [np.stack(cs).reshape(lead + cs[0].shape) if lead else cs[0]
+                 for cs in per_core]
+        out["cores"] = [jnp.asarray(c) for c in cores]
+    elif spec.kind == "int4":
+        qws, scs = [], []
+        for i in range(flat.shape[0]):
+            q = quantize_int4(flat[i].T, spec.quant_group)  # (out, in) layout
+            qws.append(np.asarray(q["qweight"]))
+            scs.append(np.asarray(q["scales"]))
+        out["qweight"] = jnp.asarray(np.stack(qws).reshape(lead + qws[0].shape) if lead else qws[0])
+        out["scales"] = jnp.asarray(np.stack(scs).reshape(lead + scs[0].shape) if lead else scs[0])
+    else:
+        raise ValueError(spec.kind)
+    if "b" in p_dense:
+        out["b"] = jnp.asarray(p_dense["b"])
+    return out
+
+
+def _walk(p_dense, spec_tree, svd_method):
+    if isinstance(spec_tree, LinearSpec):
+        return _convert_linear(p_dense, spec_tree, svd_method)
+    if spec_tree is None:
+        return p_dense
+    if isinstance(spec_tree, dict):
+        return {k: _walk(p_dense[k], spec_tree[k], svd_method) if k in spec_tree
+                else p_dense[k] for k in p_dense}
+    if isinstance(spec_tree, (list, tuple)):
+        return [_walk(p, s, svd_method) for p, s in zip(p_dense, spec_tree)]
+    raise TypeError(type(spec_tree))
+
+
+def _specs_tree(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        from ..models import transformer
+        return transformer.specs_tree(cfg)
+    if cfg.family == "rwkv":
+        from ..models import rwkv
+        return rwkv.specs_tree(cfg)
+    if cfg.family == "griffin":
+        from ..models import griffin
+        return griffin.specs_tree(cfg)
+    if cfg.family == "encdec":
+        from ..models import whisper
+        return whisper.specs_tree(cfg)
+    raise ValueError(cfg.family)
+
+
+def compress_model(dense_params, dense_cfg: ModelConfig, target_cfg: ModelConfig,
+                   svd_method: str = "auto"):
+    """Dense checkpoint -> target (TT/int4) parameterization."""
+    tree = _specs_tree(target_cfg)
+    if target_cfg.family in ("dense", "moe"):
+        from ..models.transformer import segment_plan
+        # re-split the dense layer stack to the target segment boundaries
+        dense_stack = dense_params["segments"]
+        cat = jax.tree.map(lambda *xs: np.concatenate([np.asarray(x) for x in xs], 0),
+                           *dense_stack) if len(dense_stack) > 1 else \
+            jax.tree.map(np.asarray, dense_stack[0])
+        segs, off = [], 0
+        for n, _ in segment_plan(target_cfg):
+            segs.append(jax.tree.map(lambda a, n=n, off=off: a[off:off + n], cat))
+            off += n
+        dense_params = dict(dense_params)
+        dense_params["segments"] = segs
+    return _walk(dense_params, tree, svd_method)
+
+
+# ---------------------------------------------------------------------------
+# CR accounting (Table I reproduction)
+# ---------------------------------------------------------------------------
+@dataclass
+class RoleReport:
+    role: str
+    kind: str
+    n_in: int
+    n_out: int
+    dense_params: int
+    params: int
+    bits: int
+
+    @property
+    def cr(self) -> float:
+        return self.dense_params / max(self.params, 1)
+
+
+@dataclass
+class CompressionReport:
+    name: str
+    roles: list[RoleReport] = field(default_factory=list)
+    block_dense: int = 0  # params of one (uncompressed) block
+    block_comp: int = 0  # params of one compressed block
+    n_blocks: int = 0
+    n_tt_blocks: int = 0
+    embed_params: int = 0
+    block_bits_dense: int = 0
+    block_bits_comp: int = 0
+
+    @property
+    def block_cr(self) -> float:
+        return self.block_dense / max(self.block_comp, 1)
+
+    @property
+    def network_cr(self) -> float:
+        """Paper convention: transformer blocks only (validated in DESIGN.md)."""
+        total_dense = self.n_blocks * self.block_dense
+        total_comp = (self.n_tt_blocks * self.block_comp
+                      + (self.n_blocks - self.n_tt_blocks) * self.block_dense)
+        return total_dense / max(total_comp, 1)
+
+    @property
+    def network_cr_with_embed(self) -> float:
+        e = self.embed_params
+        total_dense = self.n_blocks * self.block_dense + e
+        total_comp = (self.n_tt_blocks * self.block_comp
+                      + (self.n_blocks - self.n_tt_blocks) * self.block_dense + e)
+        return total_dense / max(total_comp, 1)
+
+    @property
+    def network_cr_bits(self) -> float:
+        total_dense = self.n_blocks * self.block_bits_dense
+        total_comp = (self.n_tt_blocks * self.block_bits_comp
+                      + (self.n_blocks - self.n_tt_blocks) * self.block_bits_dense)
+        return total_dense / max(total_comp, 1)
+
+
+def _collect_linear_specs(tree, prefix="") -> list[tuple[str, LinearSpec]]:
+    out = []
+    if isinstance(tree, LinearSpec):
+        return [(prefix, tree)]
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(_collect_linear_specs(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_collect_linear_specs(v, f"{prefix}[{i}]"))
+    return out
+
+
+def compression_report(cfg: ModelConfig, param_bits: int = 16) -> CompressionReport:
+    """Per-role + block + network CR for a transformer-family config
+    (the paper's Table I columns)."""
+    from ..models.transformer import make_block_specs, segment_plan
+
+    rep = CompressionReport(name=cfg.name)
+    rep.n_blocks = cfg.n_layers
+    plan = segment_plan(cfg)
+    rep.n_tt_blocks = sum(n for n, tt in plan if tt)
+    rep.embed_params = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+
+    comp_specs = make_block_specs(cfg, ttd_block=True)
+    base_specs = make_block_specs(cfg.replace(ttd=cfg.ttd.__class__(enabled=False),
+                                              quant=cfg.quant.__class__(enabled=False)),
+                                  ttd_block=False)
+
+    def spec_list(bs):
+        out = list(bs.attn)
+        if bs.moe is not None:
+            out.append(("router", bs.moe["router"]))
+            for nm, sp in bs.moe["expert"].items():
+                out.append((f"expert_{nm}", sp))
+        else:
+            out.extend(bs.mlp)
+        return out
+
+    mult = {  # per-block multiplicity of each role
+        nm: (cfg.n_experts if nm.startswith("expert_") else 1)
+        for nm, _ in spec_list(comp_specs)
+    }
+    for (nm, sp), (_, sp0) in zip(spec_list(comp_specs), spec_list(base_specs)):
+        m = mult[nm]
+        rr = RoleReport(role=nm, kind=sp.kind, n_in=sp.n_in, n_out=sp.n_out,
+                        dense_params=linear_param_count(sp0),
+                        params=linear_param_count(sp),
+                        bits=linear_param_bits(sp, param_bits))
+        rep.roles.append(rr)
+        rep.block_dense += m * rr.dense_params
+        rep.block_comp += m * rr.params
+        rep.block_bits_dense += m * linear_param_bits(sp0, param_bits)
+        rep.block_bits_comp += m * rr.bits
+    return rep

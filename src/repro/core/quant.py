@@ -1,0 +1,92 @@
+"""INT4 weight quantization (paper: "Wt: INT4, Act: FP16", w4a16).
+
+Symmetric per-group quantization along the contraction (input) dimension.
+Weights are stored packed two-nibbles-per-byte (uint8) + per-group scales, the
+same layout the ``repro.kernels.int4_matmul`` Pallas kernel consumes; the
+pure-JAX path here unpacks + dequantizes inline (XLA fuses it into the
+matmul epilogue on CPU; on TPU the Pallas kernel keeps weights int4 all the
+way into VMEM — the DSP-sharing analogue, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "quantize_int4",
+    "dequantize_int4",
+    "int4_matmul_ref",
+    "pack_int4",
+    "unpack_int4",
+    "fake_quant_int4",
+]
+
+QMAX = 7  # symmetric int4: [-8, 7], scale on |max| -> 7
+
+
+def pack_int4(q: np.ndarray | jax.Array) -> jax.Array:
+    """(…, K) int8 in [-8,7] -> (…, K//2) uint8, low nibble = even index."""
+    q = jnp.asarray(q, dtype=jnp.int8)
+    if q.shape[-1] % 2:
+        raise ValueError("last dim must be even to pack int4 pairs")
+    lo = (q[..., 0::2] & 0x0F).astype(jnp.uint8)
+    hi = (q[..., 1::2] & 0x0F).astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """(…, K//2) uint8 -> (…, K) int8 in [-8, 7]."""
+    lo = (p & 0x0F).astype(jnp.int8)
+    hi = ((p >> 4) & 0x0F).astype(jnp.int8)
+    # sign-extend nibbles
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def quantize_int4(
+    w: np.ndarray | jax.Array,
+    group_size: int = 128,
+    scale_dtype=jnp.bfloat16,
+) -> dict[str, Any]:
+    """Quantize (out, in) weight -> {"qweight": packed uint8 (out, in//2),
+    "scales": (out, in//group_size)} symmetric per-group."""
+    w = jnp.asarray(w, dtype=jnp.float32)
+    out_f, in_f = w.shape
+    if in_f % group_size:
+        raise ValueError(f"in_features {in_f} not divisible by group {group_size}")
+    g = w.reshape(out_f, in_f // group_size, group_size)
+    amax = jnp.max(jnp.abs(g), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / QMAX, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -8, 7).astype(jnp.int8)
+    return {
+        "qweight": pack_int4(q.reshape(out_f, in_f)),
+        "scales": scale[..., 0].astype(scale_dtype),
+    }
+
+
+def dequantize_int4(qparams: dict[str, Any], dtype=jnp.bfloat16) -> jax.Array:
+    """Packed int4 -> dense (out, in) weight."""
+    q = unpack_int4(qparams["qweight"])  # (out, in) int8
+    out_f, in_f = q.shape
+    scales = qparams["scales"].astype(jnp.float32)  # (out, groups)
+    group = in_f // scales.shape[1]
+    w = q.reshape(out_f, scales.shape[1], group).astype(jnp.float32) * scales[..., None]
+    return w.reshape(out_f, in_f).astype(dtype)
+
+
+def int4_matmul_ref(x: jax.Array, qparams: dict[str, Any]) -> jax.Array:
+    """y = x @ W^T with int4-packed W (pure-JAX reference / CPU fallback)."""
+    w = dequantize_int4(qparams, dtype=jnp.bfloat16)
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def fake_quant_int4(w: jax.Array, group_size: int = 128) -> jax.Array:
+    """Quantize-dequantize roundtrip in float (for accuracy-delta evals)."""
+    return dequantize_int4(quantize_int4(w, group_size), dtype=w.dtype)

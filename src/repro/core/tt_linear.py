@@ -1,0 +1,137 @@
+"""TT-compressed linear layer: staged-contraction inference (paper Eq. 4).
+
+The layer never reconstructs the dense weight.  The tensorized input is
+contracted through the cores one mode at a time; between stages the data is
+*reordered* exactly as the paper's ping-pong buffers do — here the reorder is
+a reshape/transpose that XLA keeps on-chip (and that the Pallas kernel in
+``repro.kernels.tt_linear`` keeps in VMEM scratch).
+
+Stage k (paper Eq. 4):
+
+    P̄_k[t_{k-1}, (j_k, r_k)] = Σ_{(r_{k-1}, i_k)} C_k[(r_{k-1},i_k), (j_k,r_k)]
+                                                  · P_{k-1}[t_{k-1}, (r_{k-1},i_k)]
+
+with t_{k-1} = (i_{k+1}, …, i_d, j_1, …, j_{k-1});  P_0 = tensorized x,
+P̄_d = tensorized y.
+
+Params layout: ``{"cores": [C_1, …, C_d]}`` with C_k of shape
+``(r_{k-1}·n_k, m_k·r_k)`` — see ``repro.core.ttd`` for conventions.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ttd import TTSpec, cores_to_matrices, tt_svd
+
+__all__ = ["tt_linear_apply", "init_tt_linear", "tt_linear_from_dense", "tt_stage_shapes"]
+
+
+def tt_stage_shapes(spec: TTSpec, batch: int) -> list[tuple[int, int, int]]:
+    """(rows, contract, cols) of each stage's matmul for a given token count."""
+    shapes = []
+    m_prod = 1
+    for k in range(spec.d):
+        t_dim = math.prod(spec.in_modes[k + 1 :]) * m_prod
+        shapes.append(
+            (
+                batch * t_dim,
+                spec.ranks[k] * spec.in_modes[k],
+                spec.out_modes[k] * spec.ranks[k + 1],
+            )
+        )
+        m_prod *= spec.out_modes[k]
+    return shapes
+
+
+def _tt_apply(cores, p, spec: TTSpec, accum_dtype) -> jax.Array:
+    """Staged contraction keeping ALL leading dims intact: (*L, N) -> (*L, M).
+
+    Never merging the (batch, seq) leading dims means the activation
+    sharding (batch→data, seq→model) propagates untouched through every
+    stage — no resharding inside the TT segment (DESIGN.md §4 SP-for-TT).
+    """
+    lead = p.shape[:-1]
+    nl = len(lead)
+    n, m, d = spec.in_modes, spec.out_modes, spec.d
+    # store inter-stage tensors in the input dtype (bf16 halves the live
+    # intermediate footprint); every contraction still accumulates in f32
+    store_dtype = p.dtype if p.dtype != jnp.float64 else jnp.float32
+
+    p = p.reshape(*lead, n[0], math.prod(n[1:]))
+    p = jnp.swapaxes(p, nl, nl + 1)  # (*L, T_0, r_0*n_1)
+
+    m_prod = 1
+    for k in range(d):
+        c_k = cores[k].astype(store_dtype)
+        p = p.astype(store_dtype)
+        # (*L, T, r_k*n_k) @ (r_k*n_k, m_k*r_{k+1})
+        p = jax.lax.dot_general(
+            p, c_k, (((nl + 1,), (0,)), ((), ())),
+            preferred_element_type=accum_dtype,
+        ).astype(store_dtype)
+        if k < d - 1:
+            # reorder (paper's ping-pong): (*L, n_{k+1}, NR, MP, m_k, r_k)
+            #                           -> (*L, NR, MP*m_k, r_k, n_{k+1})
+            nr = math.prod(n[k + 2 :])
+            p = p.reshape(*lead, n[k + 1], nr, m_prod, m[k], spec.ranks[k + 1])
+            perm = tuple(range(nl)) + (nl + 1, nl + 2, nl + 3, nl + 4, nl)
+            p = p.transpose(perm)
+            m_prod *= m[k]
+            p = p.reshape(*lead, nr * m_prod, spec.ranks[k + 1] * n[k + 1])
+    return p.reshape(*lead, spec.n_out)
+
+
+def tt_linear_apply(
+    params: dict[str, Any],
+    x: jax.Array,
+    spec: TTSpec,
+    *,
+    accum_dtype=jnp.float32,
+) -> jax.Array:
+    """Apply the TT linear to ``x`` of shape (..., N) -> (..., M)."""
+    cores = params["cores"]
+    out_dtype = x.dtype
+    if x.ndim == 1:
+        return _tt_apply(cores, x[None], spec, accum_dtype)[0].astype(out_dtype)
+    return _tt_apply(cores, x, spec, accum_dtype).astype(out_dtype)
+
+
+def init_tt_linear(
+    key: jax.Array,
+    spec: TTSpec,
+    dtype=jnp.float32,
+    *,
+    scale: float | None = None,
+) -> dict[str, Any]:
+    """Random init whose implied dense weight matches fan-in variance.
+
+    Var(W_ij) = (Π_{k=1..d-1} r_k) · Π_k σ_k²  ⇒  σ_k = (σ_W²/R)^(1/2d),
+    with target σ_W² = scale²/N (default scale=1, i.e. LeCun/fan-in).
+    """
+    scale = 1.0 if scale is None else scale
+    var_w = scale**2 / spec.n_in
+    r_interior = math.prod(spec.ranks[1:-1]) or 1
+    sigma_k = (var_w / r_interior) ** (1.0 / (2 * spec.d))
+    cores = []
+    for k, shp in enumerate(spec.core_matrix_shapes()):
+        key, sub = jax.random.split(key)
+        cores.append(jax.random.normal(sub, shp, dtype=jnp.float32).astype(dtype) * sigma_k)
+    return {"cores": cores}
+
+
+def tt_linear_from_dense(
+    w: np.ndarray,
+    spec: TTSpec,
+    dtype=jnp.float32,
+    method: str = "auto",
+) -> dict[str, Any]:
+    """TT-SVD a dense (M, N) weight into matrix-layout cores (paper Alg. 1)."""
+    cores3d = tt_svd(np.asarray(w), spec, method=method)
+    mats = cores_to_matrices(cores3d, spec)
+    return {"cores": [jnp.asarray(c, dtype=dtype) for c in mats]}

@@ -1,0 +1,315 @@
+"""Tensor-Train decomposition of linear-layer weights (paper §II, Algorithm 1).
+
+Conventions
+-----------
+A linear layer computes ``y = W @ x`` with ``W ∈ R^{M×N}``, ``M = Π m_k``,
+``N = Π n_k``.  The weight is *tensorized* into a d-mode tensor with mode
+sizes ``v_k = m_k · n_k`` (m-major within each mode):
+
+    T[μ_1, …, μ_d] = W[flat(i_1…i_d), flat(j_1…j_d)],   μ_k = i_k·n_k + j_k
+
+TT-SVD (Oseledets 2011; paper Algorithm 1) factorizes T into cores
+
+    G_k ∈ R^{r_{k-1} × v_k × r_k},   r_0 = r_d = 1.
+
+For inference we keep each core in **matrix layout**
+
+    C_k ∈ R^{(r_{k-1}·n_k) × (m_k·r_k)}    (rows r-major, cols m-major)
+
+which is the shape the staged contraction (paper Eq. 4) and the Pallas
+kernel consume directly.
+
+Compression ratio (paper Eq. 2):  CR = Π v_k / Σ v_k·r_{k-1}·r_k.
+
+The decomposition itself is an *offline* step and runs in numpy (float64 by
+default for numerical headroom); inference paths are jax (see tt_linear.py
+and kernels/).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "TTSpec",
+    "factorize",
+    "tensorize_weight",
+    "untensorize_weight",
+    "tt_svd",
+    "tt_reconstruct",
+    "tt_params",
+    "compression_ratio",
+    "cores_to_matrices",
+    "matrices_to_cores",
+]
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TTSpec:
+    """Static description of one TT-compressed linear layer.
+
+    ``in_modes``  = (n_1, …, n_d)   with Π n_k = N (input features)
+    ``out_modes`` = (m_1, …, m_d)   with Π m_k = M (output features)
+    ``ranks``     = (r_0, r_1, …, r_d) with r_0 = r_d = 1.
+    """
+
+    in_modes: tuple[int, ...]
+    out_modes: tuple[int, ...]
+    ranks: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.in_modes) != len(self.out_modes):
+            raise ValueError("in_modes and out_modes must have equal length")
+        if len(self.ranks) != len(self.in_modes) + 1:
+            raise ValueError("ranks must have length d+1")
+        if self.ranks[0] != 1 or self.ranks[-1] != 1:
+            raise ValueError("boundary ranks must be 1")
+
+    @property
+    def d(self) -> int:
+        return len(self.in_modes)
+
+    @property
+    def n_in(self) -> int:
+        return math.prod(self.in_modes)
+
+    @property
+    def n_out(self) -> int:
+        return math.prod(self.out_modes)
+
+    @property
+    def mode_sizes(self) -> tuple[int, ...]:
+        return tuple(m * n for m, n in zip(self.out_modes, self.in_modes))
+
+    def core_matrix_shapes(self) -> list[tuple[int, int]]:
+        """Shapes of the matrix-layout cores C_k."""
+        return [
+            (self.ranks[k] * self.in_modes[k], self.out_modes[k] * self.ranks[k + 1])
+            for k in range(self.d)
+        ]
+
+    def n_params(self) -> int:
+        return sum(r * c for r, c in self.core_matrix_shapes())
+
+    def compression_ratio(self) -> float:
+        return (self.n_in * self.n_out) / self.n_params()
+
+    def flops_per_token(self) -> int:
+        """MAC*2 count of the staged contraction for one input vector."""
+        total = 0
+        rest_n = list(self.in_modes)
+        m_prod = 1
+        for k in range(self.d):
+            contract = self.ranks[k] * self.in_modes[k]
+            out_cols = self.out_modes[k] * self.ranks[k + 1]
+            t_dim = math.prod(rest_n[k + 1 :]) * m_prod
+            total += 2 * t_dim * contract * out_cols
+            m_prod *= self.out_modes[k]
+        return total
+
+    def max_intermediate(self) -> int:
+        """Largest per-token intermediate element count across stages."""
+        best = self.n_in
+        m_prod = 1
+        for k in range(self.d):
+            m_prod *= self.out_modes[k]
+            sz = math.prod(self.in_modes[k + 1 :]) * m_prod * self.ranks[k + 1]
+            best = max(best, sz)
+        return best
+
+    @staticmethod
+    def make(
+        n_in: int,
+        n_out: int,
+        rank: int | Sequence[int],
+        d: int = 4,
+        in_modes: Sequence[int] | None = None,
+        out_modes: Sequence[int] | None = None,
+    ) -> "TTSpec":
+        """Build a spec, auto-factorizing dims unless modes are given
+        (paper Algorithm 1 lines 1-2)."""
+        in_modes = tuple(in_modes) if in_modes is not None else factorize(n_in, d)
+        out_modes = tuple(out_modes) if out_modes is not None else factorize(n_out, d)
+        d = len(in_modes)
+        if isinstance(rank, int):
+            ranks = [1] + [rank] * (d - 1) + [1]
+        else:
+            ranks = list(rank)
+            if len(ranks) == d - 1:  # interior ranks only
+                ranks = [1] + ranks + [1]
+        # clamp ranks to the maximal attainable TT-ranks
+        v = [m * n for m, n in zip(out_modes, in_modes)]
+        for k in range(1, d):
+            left = math.prod(v[:k])
+            right = math.prod(v[k:])
+            ranks[k] = min(ranks[k], left, right)
+        return TTSpec(tuple(in_modes), tuple(out_modes), tuple(ranks))
+
+
+# ---------------------------------------------------------------------------
+# Factorization helper (Algorithm 1, lines 1-2)
+# ---------------------------------------------------------------------------
+def _prime_factors(n: int) -> list[int]:
+    out = []
+    f = 2
+    while f * f <= n:
+        while n % f == 0:
+            out.append(f)
+            n //= f
+        f += 1
+    if n > 1:
+        out.append(n)
+    return out
+
+
+def factorize(n: int, d: int) -> tuple[int, ...]:
+    """Split ``n`` into ``d`` factors, as balanced as possible.
+
+    Greedy: repeatedly multiply the largest remaining prime into the
+    currently-smallest bucket.  Deterministic; returns factors sorted
+    descending (matching the paper's convention, e.g. 13696 -> (107,8,4,4)).
+    """
+    if n <= 0:
+        raise ValueError("n must be positive")
+    primes = sorted(_prime_factors(n), reverse=True)
+    buckets = [1] * d
+    for p in primes:
+        buckets[int(np.argmin(buckets))] *= p
+    return tuple(sorted(buckets, reverse=True))
+
+
+# ---------------------------------------------------------------------------
+# Tensorization (paper §II.B)
+# ---------------------------------------------------------------------------
+def tensorize_weight(w: np.ndarray, spec: TTSpec) -> np.ndarray:
+    """(M, N) weight -> (v_1, …, v_d) tensor with μ_k = i_k·n_k + j_k."""
+    m, n = spec.out_modes, spec.in_modes
+    d = spec.d
+    if w.shape != (spec.n_out, spec.n_in):
+        raise ValueError(f"weight shape {w.shape} != ({spec.n_out},{spec.n_in})")
+    t = w.reshape(*m, *n)
+    perm = [x for k in range(d) for x in (k, d + k)]  # interleave (m_k, n_k)
+    t = t.transpose(perm)
+    return t.reshape(spec.mode_sizes)
+
+
+def untensorize_weight(t: np.ndarray, spec: TTSpec) -> np.ndarray:
+    """Inverse of :func:`tensorize_weight`."""
+    m, n = spec.out_modes, spec.in_modes
+    d = spec.d
+    t = t.reshape([x for k in range(d) for x in (m[k], n[k])])
+    perm = [2 * k for k in range(d)] + [2 * k + 1 for k in range(d)]
+    return t.transpose(perm).reshape(spec.n_out, spec.n_in)
+
+
+# ---------------------------------------------------------------------------
+# TT-SVD (paper Algorithm 1, lines 7-18)
+# ---------------------------------------------------------------------------
+def _truncated_left_factor(c: np.ndarray, rank: int, method: str):
+    """Return (U_r, rest) with c ≈ U_r @ rest, U_r orthonormal columns.
+
+    method 'svd'  : exact thin SVD (reference path).
+    method 'gram' : eigendecomposition of c @ c.T — O(rows²·cols), exact for
+                    the retained subspace, much faster when rows ≪ cols
+                    (always true for our layer shapes: rows = r·v_k ≲ 4k).
+    """
+    rows = c.shape[0]
+    r = min(rank, rows, c.shape[1])
+    if method == "auto":
+        method = "gram" if c.shape[1] > 4 * rows and rows > 64 else "svd"
+    if method == "svd":
+        u, s, vt = np.linalg.svd(c, full_matrices=False)
+        return u[:, :r], s[:r, None] * vt[:r]
+    elif method == "gram":
+        g = c @ c.T
+        w, v = np.linalg.eigh(g)  # ascending
+        idx = np.argsort(w)[::-1][:r]
+        u = v[:, idx]
+        return u, u.T @ c
+    raise ValueError(f"unknown method {method}")
+
+
+def tt_svd(
+    w: np.ndarray,
+    spec: TTSpec,
+    method: str = "auto",
+    dtype=np.float64,
+) -> list[np.ndarray]:
+    """TT-SVD of a (M, N) weight; returns 3D cores G_k (r_{k-1}, v_k, r_k)."""
+    c = tensorize_weight(np.asarray(w, dtype=dtype), spec)
+    v = spec.mode_sizes
+    d = spec.d
+    cores: list[np.ndarray] = []
+    r_prev = 1
+    c = c.reshape(r_prev * v[0], -1)
+    for k in range(d - 1):
+        u, rest = _truncated_left_factor(c, spec.ranks[k + 1], method)
+        r_k = u.shape[1]
+        if r_k != spec.ranks[k + 1]:
+            raise ValueError(
+                f"attained rank {r_k} < requested {spec.ranks[k + 1]} at core {k}; "
+                "clamp ranks via TTSpec.make"
+            )
+        cores.append(u.reshape(r_prev, v[k], r_k))
+        r_prev = r_k
+        c = rest.reshape(r_prev * v[k + 1], -1)
+    cores.append(c.reshape(r_prev, v[d - 1], 1))
+    return cores
+
+
+def tt_reconstruct(cores: list[np.ndarray], spec: TTSpec) -> np.ndarray:
+    """Contract cores back to the dense (M, N) weight (for validation)."""
+    t = cores[0]  # (1, v_1, r_1)
+    for g in cores[1:]:
+        t = np.tensordot(t, g, axes=([-1], [0]))  # (..., v_k, r_k)
+    t = t.reshape(spec.mode_sizes)
+    return untensorize_weight(t, spec)
+
+
+# ---------------------------------------------------------------------------
+# Layout conversion: 3D cores <-> matrix cores
+# ---------------------------------------------------------------------------
+def cores_to_matrices(cores: list[np.ndarray], spec: TTSpec) -> list[np.ndarray]:
+    """G_k (r_{k-1}, v_k, r_k) -> C_k ((r_{k-1}·n_k), (m_k·r_k)).
+
+    Mode index is m-major (μ = i·n + j) so the 3D core reshapes to
+    (r_{k-1}, m_k, n_k, r_k); the matrix layout wants rows (r_{k-1}, n_k)
+    and cols (m_k, r_k).
+    """
+    out = []
+    for k, g in enumerate(cores):
+        r0, v, r1 = g.shape
+        m_k, n_k = spec.out_modes[k], spec.in_modes[k]
+        g4 = g.reshape(r0, m_k, n_k, r1)
+        c = g4.transpose(0, 2, 1, 3).reshape(r0 * n_k, m_k * r1)
+        out.append(np.ascontiguousarray(c))
+    return out
+
+
+def matrices_to_cores(mats: list, spec: TTSpec) -> list[np.ndarray]:
+    """Inverse of :func:`cores_to_matrices`."""
+    out = []
+    for k, c in enumerate(mats):
+        c = np.asarray(c)
+        r0, r1 = spec.ranks[k], spec.ranks[k + 1]
+        m_k, n_k = spec.out_modes[k], spec.in_modes[k]
+        g4 = c.reshape(r0, n_k, m_k, r1).transpose(0, 2, 1, 3)
+        out.append(np.ascontiguousarray(g4.reshape(r0, m_k * n_k, r1)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Accounting (paper Eq. 2 / Table I)
+# ---------------------------------------------------------------------------
+def tt_params(spec: TTSpec) -> int:
+    return spec.n_params()
+
+
+def compression_ratio(spec: TTSpec) -> float:
+    return spec.compression_ratio()

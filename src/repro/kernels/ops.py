@@ -1,0 +1,49 @@
+"""jit'd public wrappers that dispatch kernel vs pure-JAX reference.
+
+``use_pallas`` policy: the Pallas kernels target TPU (validated here in
+interpret mode); the dry-run / CPU paths use the mathematically identical
+pure-JAX implementations.  On a real TPU deployment, flip
+``repro.kernels.ops.USE_PALLAS = True`` (or set cfg) and the model's linear
+dispatch routes through the fused kernels.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ttd import TTSpec
+from . import ref
+from .int4_matmul import int4_matmul_pallas
+from .tt_linear import tt_linear_pallas
+
+USE_PALLAS = False  # module-level switch (True on real TPU)
+INTERPRET = True  # interpret mode for CPU validation
+
+
+def tt_linear(x, cores, spec: TTSpec, *, scale=None, bias=None, residual=None,
+              use_pallas: bool | None = None):
+    """(…, N) -> (…, M); flattens leading dims for the kernel grid."""
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, spec.n_in)
+    rf = residual.reshape(-1, spec.n_out) if residual is not None else None
+    if use_pallas:
+        y = tt_linear_pallas(xf, cores, spec, scale=scale, bias=bias,
+                             residual=rf, interpret=INTERPRET)
+    else:
+        y = ref.tt_linear_bn_res(xf, cores, spec, scale=scale, bias=bias, residual=rf)
+    return y.reshape(*lead, spec.n_out)
+
+
+def int4_matmul(x, qweight, scales, *, group: int = 128,
+                use_pallas: bool | None = None):
+    use_pallas = USE_PALLAS if use_pallas is None else use_pallas
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    if use_pallas:
+        y = int4_matmul_pallas(xf, qweight, scales, group=group, interpret=INTERPRET)
+    else:
+        y = ref.int4_matmul(xf, qweight, scales, group=group)
+    return y.reshape(*lead, qweight.shape[0])

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two independent references for the TT kernel:
+  * ``tt_linear_staged``  — the staged Eq.-4 contraction (shared with the
+    model's pure-JAX path).
+  * ``tt_linear_dense``   — reconstruct the dense W from the cores and do a
+    plain matmul (the ground truth the staged algorithm itself is tested
+    against in tests/test_ttd.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.quant import dequantize_int4
+from ..core.tt_linear import tt_linear_apply
+from ..core.ttd import TTSpec, matrices_to_cores, tt_reconstruct
+
+
+def tt_linear_staged(x: jax.Array, cores: list[jax.Array], spec: TTSpec) -> jax.Array:
+    return tt_linear_apply({"cores": cores}, x, spec)
+
+
+def tt_linear_dense(x: jax.Array, cores: list[jax.Array], spec: TTSpec) -> jax.Array:
+    w = tt_reconstruct(matrices_to_cores([np.asarray(c, np.float64) for c in cores], spec), spec)
+    return (np.asarray(x, np.float64) @ w.T).astype(np.asarray(x).dtype)
+
+
+def tt_linear_bn_res(x, cores, spec, scale=None, bias=None, residual=None):
+    y = tt_linear_staged(x, cores, spec).astype(jnp.float32)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32) + (bias.astype(jnp.float32) if bias is not None else 0.0)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def int4_matmul(x: jax.Array, qweight: jax.Array, scales: jax.Array,
+                group: int = 128) -> jax.Array:
+    w = dequantize_int4({"qweight": qweight, "scales": scales}, dtype=jnp.float32)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape-cell).
+
+Nothing here allocates device memory: these feed ``jax.jit(...).lower()``.
+The modality frontends (audio frames / vision patches) are stubs per the
+assignment: whisper receives precomputed (B, 1500, D) frame embeddings and
+``seq_len`` means the *decoder* length; qwen2-vl receives token ids plus 3D
+M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig, ShapeCell
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": SDS((b, s), jnp.int32),
+        "targets": SDS((b, s), jnp.int32),
+        "loss_mask": SDS((b, s), jnp.float32),
+    }
+    if cfg.pos_type == "mrope":
+        batch["positions"] = SDS((3, b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = SDS((b, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.pos_type == "mrope":
+        batch["positions"] = SDS((3, b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = SDS((b, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    b = cell.global_batch
+    batch = {"tokens": SDS((b, 1), jnp.int32)}
+    if cfg.pos_type == "mrope":
+        batch["positions"] = SDS((3, b, 1), jnp.int32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    if cell.kind == "train":
+        return train_input_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_input_specs(cfg, cell)
+    return decode_input_specs(cfg, cell)

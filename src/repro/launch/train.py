@@ -1,0 +1,98 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 100 --data 1 --model 1
+
+On a real cluster each host runs this with jax.distributed initialized by the
+scheduler; the mesh spans all pods ((pod, data, model) axes). In this
+container it runs on however many (real or DRYRUN_XLA_FLAGS-faked) devices
+exist. Composes: config registry -> sharded TrainState -> jitted train_step
+-> fault-tolerant Trainer (async checkpoints, watchdog, resume).
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, TrainConfig
+from repro.configs import ALL_ARCHS, get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_mesh
+from repro.models import get_model
+from repro.train.step import (batch_pspec, build_train_step, init_train_state,
+                              state_pspecs)
+from repro.train.trainer import Trainer
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list(ALL_ARCHS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adafactor"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="dots", choices=["none", "dots", "full"])
+    ap.add_argument("--data", type=int, default=1, help="data-parallel mesh dim")
+    ap.add_argument("--model", type=int, default=1, help="model-parallel mesh dim")
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    model = get_model(cfg)
+    tc = TrainConfig(global_batch=args.global_batch, seq_len=args.seq_len,
+                     lr=args.lr, optimizer=args.optimizer,
+                     microbatches=args.microbatches, remat=args.remat,
+                     total_steps=args.steps, warmup_steps=max(args.steps // 20, 5))
+    mesh_cfg = MeshConfig(data=args.data, model=args.model, pods=args.pods)
+    use_mesh = mesh_cfg.n_devices > 1
+    mesh = make_mesh(mesh_cfg) if use_mesh else None
+
+    state = init_train_state(model, tc, jax.random.PRNGKey(tc.seed), mesh=mesh)
+    step = build_train_step(model, tc)
+    shardings = None
+    if mesh is not None:
+        specs = state_pspecs(model, tc, mesh)
+        shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        bspec = NamedSharding(mesh, batch_pspec(mesh, 1))
+        step = jax.jit(step, in_shardings=(shardings, {
+            "tokens": bspec, "targets": bspec,
+            "loss_mask": NamedSharding(mesh, batch_pspec(mesh, 1))}),
+            out_shardings=(shardings, None))
+    else:
+        step = jax.jit(step)
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
+                      global_batch=tc.global_batch, seed=tc.seed)
+    trainer = Trainer(step, state, data, ckpt_dir=args.ckpt_dir,
+                      state_shardings=shardings)
+    if args.resume and args.ckpt_dir:
+        trainer._restore_latest()
+    ctx = mesh or _nullcontext()
+    with (jax.set_mesh(mesh) if mesh is not None else _nullcontext()):
+        report = trainer.run(args.steps)
+    print(f"done: loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f} "
+          f"({report.steps_done} steps, {report.restarts} restarts)")
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .api import Model, get_model  # noqa: F401

@@ -1,0 +1,90 @@
+"""Uniform Model protocol over all families.
+
+``batch`` convention:
+  {"tokens": (B,S) int32}                              LM families
+  {"tokens": ..., "positions": (3,B,S) int32}          M-RoPE (qwen2-vl)
+  {"tokens": ..., "enc_frames": (B,T_enc,D)}           enc-dec (whisper)
+Decode batches carry tokens of shape (B,1) plus scalar ``pos``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from . import griffin, rwkv, transformer, whisper
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    forward: Callable[..., tuple[jax.Array, jax.Array]]  # (params, batch, remat) -> (hidden, aux)
+    head_weight: Callable[[Any], jax.Array]  # (params) -> (D, V)
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+
+
+def _lm_adapter(mod, cfg: ModelConfig) -> Model:
+    def forward(params, batch, remat="none"):
+        return mod.forward(params, cfg, batch["tokens"],
+                           positions=batch.get("positions"), remat=remat)
+
+    def prefill_fn(params, batch, cache_dtype=jnp.bfloat16, max_len=None):
+        return mod.prefill(params, cfg, batch["tokens"],
+                           positions=batch.get("positions"),
+                           cache_dtype=cache_dtype, max_len=max_len)
+
+    def decode_fn(params, cache, batch, pos):
+        return mod.decode_step(params, cfg, cache, batch["tokens"], pos,
+                               positions=batch.get("positions"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init_lm(key, cfg),
+        forward=forward,
+        head_weight=lambda params: mod.head_weight(params, cfg),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: mod.init_cache(cfg, batch, max_len, dtype),
+        prefill=prefill_fn,
+        decode_step=decode_fn,
+    )
+
+
+def _whisper_adapter(cfg: ModelConfig) -> Model:
+    def forward(params, batch, remat="none"):
+        return whisper.forward(params, cfg, batch["tokens"], remat=remat,
+                               enc_frames=batch.get("enc_frames"))
+
+    def prefill_fn(params, batch, cache_dtype=jnp.bfloat16, max_len=None):
+        return whisper.prefill(params, cfg, batch["tokens"], cache_dtype=cache_dtype,
+                               max_len=max_len, enc_frames=batch.get("enc_frames"))
+
+    def decode_fn(params, cache, batch, pos):
+        return whisper.decode_step(params, cfg, cache, batch["tokens"], pos)
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: whisper.init_lm(key, cfg),
+        forward=forward,
+        head_weight=lambda params: whisper.head_weight(params, cfg),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: whisper.init_cache(cfg, batch, max_len, dtype),
+        prefill=prefill_fn,
+        decode_step=decode_fn,
+    )
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return _lm_adapter(transformer, cfg)
+    if fam == "rwkv":
+        return _lm_adapter(rwkv, cfg)
+    if fam == "griffin":
+        return _lm_adapter(griffin, cfg)
+    if fam == "encdec":
+        return _whisper_adapter(cfg)
+    raise ValueError(f"unknown family {fam}")

@@ -1,0 +1,416 @@
+"""Griffin / RecurrentGemma: RG-LRU recurrent blocks + local (sliding-window)
+MQA attention in a 2:1 pattern (arXiv:2402.19427).
+
+RG-LRU (per channel):
+
+    r_t = σ(W_a u_t + b_a);  i_t = σ(W_x u_t + b_x)
+    log a_t = -c · softplus(Λ) · r_t          (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+computed with ``associative_scan`` over time (parallel depth log S) for
+train/prefill and a one-step update for decode.  The diagonal recurrence is
+already minimal — TTD applies to the in/out projections and the MLP
+(DESIGN.md §5).
+
+Layer pattern (rec, rec, attn) is scanned in *groups* so the HLO stays one
+group-body deep; remainder layers form a tail segment.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from ..dist import constrain
+from ..dist.api import BATCH
+from .modules import (
+    apply_linear, apply_mlp, apply_norm, dt, embed_lookup, init_embed,
+    init_linear, init_mlp, init_norm, linear_spec, mlp_specs, remat_wrap,
+    stack_init, unembed,
+)
+from .transformer import (
+    _ring_from_prefill, _rope_tables, attn_decode, attn_full, make_block_specs,
+)
+from .transformer import init_block as init_attn_block
+
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Pattern / segment planning
+# ---------------------------------------------------------------------------
+def pattern_plan(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(n_full_groups, tail_kinds)."""
+    pat = cfg.pattern or ("rec", "rec", "attn")
+    n_groups = cfg.n_layers // len(pat)
+    tail = cfg.n_layers - n_groups * len(pat)
+    return n_groups, tuple(pat[:tail])
+
+
+def _pat(cfg):
+    return cfg.pattern or ("rec", "rec", "attn")
+
+
+# ---------------------------------------------------------------------------
+# Specs / init
+# ---------------------------------------------------------------------------
+def rec_specs(cfg: ModelConfig, ttd_block: bool = True):
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "in_x": linear_spec(cfg, "lru_in", d, w, ttd_block=ttd_block),
+        "in_g": linear_spec(cfg, "lru_in_gate", d, w, ttd_block=ttd_block),
+        "gate_a": linear_spec(cfg, "lru_gate_a", w, w),
+        "gate_x": linear_spec(cfg, "lru_gate_x", w, w),
+        "out": linear_spec(cfg, "lru_out", w, d, ttd_block=ttd_block),
+        "mlp": mlp_specs(cfg, ttd_block),
+    }
+
+
+def init_rec_block(key, cfg: ModelConfig, specs, param_dtype):
+    w = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "ln1": init_norm(cfg, cfg.d_model, param_dtype),
+        "ln2": init_norm(cfg, cfg.d_model, param_dtype),
+        "in_x": init_linear(ks[0], specs["in_x"], param_dtype),
+        "in_g": init_linear(ks[1], specs["in_g"], param_dtype),
+        "gate_a": init_linear(ks[2], specs["gate_a"], param_dtype),
+        "gate_x": init_linear(ks[3], specs["gate_x"], param_dtype),
+        "out": init_linear(ks[4], specs["out"], param_dtype),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_width, w), jnp.float32) / math.sqrt(cfg.conv_width)).astype(param_dtype),
+        "conv_b": jnp.zeros((w,), param_dtype),
+        "lambda": jnp.full((w,), 0.7, param_dtype),
+        "mlp": init_mlp(ks[6], specs["mlp"], param_dtype),
+    }
+
+
+def init_lm(key, cfg: ModelConfig):
+    param_dtype = dt(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    rspecs = rec_specs(cfg, True)
+    aspecs = make_block_specs(cfg, True)
+
+    def init_group(k):
+        gks = jax.random.split(k, len(pat))
+        return {
+            f"l{i}_{kind}": (init_rec_block(gk, cfg, rspecs, param_dtype) if kind == "rec"
+                             else init_attn_block(gk, cfg, aspecs, param_dtype))
+            for i, (kind, gk) in enumerate(zip(pat, gks))
+        }
+
+    params: dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg, param_dtype),
+        "final_norm": init_norm(cfg, cfg.d_model, param_dtype),
+    }
+    if n_groups:
+        params["groups"] = stack_init(init_group, ks[1], n_groups)
+    if tail:
+        tks = jax.random.split(ks[2], len(tail))
+        params["tail"] = [
+            (init_rec_block(tk, cfg, rspecs, param_dtype) if kind == "rec"
+             else init_attn_block(tk, cfg, aspecs, param_dtype))
+            for kind, tk in zip(tail, tks)
+        ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Conv1d (causal depthwise) + RG-LRU
+# ---------------------------------------------------------------------------
+def causal_conv1d(p, u, conv_state=None):
+    """u: (B,S,W).  conv_state: (B, cw-1, W) previous inputs or None (t=0).
+    Returns y, new_conv_state (last cw-1 inputs)."""
+    cw = p["conv_w"].shape[0]
+    if conv_state is None:
+        u_pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        u_pad = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    y = sum(u_pad[:, i : i + u.shape[1]] * p["conv_w"][i].astype(u.dtype) for i in range(cw))
+    y = y + p["conv_b"].astype(u.dtype)
+    return y, u_pad[:, -(cw - 1):]
+
+
+def rg_lru(p, specs, u, h0, compute_dtype):
+    """u: (B,S,W); h0: (B,W) f32.  Returns h (B,S,W), h_last (B,W) f32.
+
+    Gate math runs in f32; the associative scan itself carries
+    ``compute_dtype`` operands (Griffin trains in bf16 on TPU — halves the
+    scan's memory traffic, hillclimb-2 iteration 3)."""
+    r = jax.nn.sigmoid(apply_linear(p["gate_a"], u, specs["gate_a"], compute_dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["gate_x"], u, specs["gate_x"], compute_dtype).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32))
+    gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    scan_dtype = u.dtype
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(scan_dtype), gated.astype(scan_dtype)), axis=1)
+    return h, h[:, -1].astype(jnp.float32)
+
+
+def rg_lru_step(p, specs, u, h0, compute_dtype):
+    """One-token update. u: (B,1,W); h0: (B,W) f32."""
+    r = jax.nn.sigmoid(apply_linear(p["gate_a"], u, specs["gate_a"], compute_dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(apply_linear(p["gate_x"], u, specs["gate_x"], compute_dtype).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)[:, 0]
+    b = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32)))[:, 0]
+    h = a * h0 + b
+    return h[:, None], h
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def rec_block_seq(p, specs, cfg: ModelConfig, x, compute_dtype, h0=None, conv0=None,
+                  return_state=False):
+    """Full-sequence recurrent block (train/prefill).
+
+    The TT projections keep tokens (seq) sharded over `model`; the recurrence
+    needs the full sequence locally with the LRU width sharded instead.  The
+    seq→width reshard goes through an intermediate batch-only sharding: XLA
+    handles each hop natively, where the direct transition falls into the
+    "involuntary full rematerialization" replicate-everything path
+    (EXPERIMENTS.md §Perf hillclimb 2)."""
+    hid = apply_norm(p["ln1"], x, cfg)
+    u = apply_linear(p["in_x"], hid, specs["in_x"], compute_dtype)
+    g_lin = apply_linear(p["in_g"], hid, specs["in_g"], compute_dtype)
+    u = constrain(u, BATCH, None, None)  # hop 1: gather seq
+    g_lin = constrain(g_lin, BATCH, None, None)
+    u = constrain(u, BATCH, None, "model")  # hop 2: shard width (local slice)
+    g_lin = constrain(g_lin, BATCH, None, "model")
+    g = jax.nn.gelu(g_lin.astype(jnp.float32), approximate=True)
+    u, conv_state = causal_conv1d(p, u, conv0)
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    h, h_last = rg_lru(p, specs, u, h0, compute_dtype)
+    y = (h.astype(compute_dtype) * g.astype(compute_dtype))
+    y = constrain(y, BATCH, None, None)  # reverse hops for the TT out-proj
+    y = constrain(y, BATCH, "model", None)
+    y = apply_linear(p["out"], y, specs["out"], compute_dtype)
+    x = x + y.astype(x.dtype)
+    x = constrain(x, BATCH, "model", None)
+    hid = apply_norm(p["ln2"], x, cfg)
+    x = x + apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype).astype(x.dtype)
+    x = constrain(x, BATCH, "model", None)
+    if return_state:
+        return x, {"h": h_last, "conv": conv_state}
+    return x
+
+
+def rec_block_decode(p, specs, cfg: ModelConfig, x, state, compute_dtype):
+    hid = apply_norm(p["ln1"], x, cfg)
+    u = apply_linear(p["in_x"], hid, specs["in_x"], compute_dtype)
+    g = jax.nn.gelu(apply_linear(p["in_g"], hid, specs["in_g"], compute_dtype).astype(jnp.float32), approximate=True)
+    u, conv_state = causal_conv1d(p, u, state["conv"])
+    h, h_last = rg_lru_step(p, specs, u, state["h"].astype(jnp.float32), compute_dtype)
+    y = (h * g).astype(compute_dtype)
+    y = apply_linear(p["out"], y, specs["out"], compute_dtype)
+    x = x + y.astype(x.dtype)
+    hid = apply_norm(p["ln2"], x, cfg)
+    x = x + apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype).astype(x.dtype)
+    return x, {"h": h_last, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+def attn_block_seq(p, specs, cfg: ModelConfig, x, rope_cs, compute_dtype,
+                   return_cache=False, cache_len=0, cache_dtype=jnp.bfloat16):
+    hid = apply_norm(p["ln1"], x, cfg)
+    a, kv = attn_full(p, specs, cfg, hid, rope_cs, compute_dtype, return_kv=return_cache)
+    x = x + a.astype(x.dtype)
+    hid = apply_norm(p["ln2"], x, cfg)
+    x = x + apply_mlp(p["mlp"], hid, specs.mlp_d(), cfg, compute_dtype).astype(x.dtype)
+    x = constrain(x, BATCH, "model", None)
+    if return_cache:
+        k, v = kv
+        s = x.shape[1]
+        k_c, v_c, pos_c = _ring_from_prefill(k, v, s, cache_len, cache_dtype)
+        return x, {"k": k_c, "v": v_c, "pos": pos_c}
+    return x
+
+
+def attn_block_decode(p, specs, cfg: ModelConfig, x, cache, rope_cs, pos, compute_dtype):
+    hid = apply_norm(p["ln1"], x, cfg)
+    a, new_cache = attn_decode(p, specs, cfg, hid, rope_cs, cache, pos, compute_dtype)
+    x = x + a.astype(x.dtype)
+    hid = apply_norm(p["ln2"], x, cfg)
+    x = x + apply_mlp(p["mlp"], hid, specs.mlp_d(), cfg, compute_dtype).astype(x.dtype)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    w = cfg.lru_width or cfg.d_model
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    win = min(cfg.window or max_len, max_len)
+
+    def rec_state(lead):
+        return {"h": jnp.zeros(lead + (batch, w), jnp.float32),
+                "conv": jnp.zeros(lead + (batch, cfg.conv_width - 1, w), cache_dtype)}
+
+    def attn_state(lead):
+        return {"k": jnp.zeros(lead + (batch, win, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+                "v": jnp.zeros(lead + (batch, win, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+                "pos": jnp.full(lead + (win,), -1, jnp.int32)}
+
+    out: dict[str, Any] = {"tail": [rec_state(()) if k == "rec" else attn_state(()) for k in tail]}
+    if n_groups:
+        out["groups"] = {
+            f"l{i}_{kind}": (rec_state((n_groups,)) if kind == "rec" else attn_state((n_groups,)))
+            for i, kind in enumerate(pat)
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward / prefill / decode
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none"):
+    compute_dtype = dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(cfg.d_model)
+    x = constrain(x, BATCH, "model", None)
+    rope_cs = _rope_tables(cfg, positions, b, s)
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    rspecs, aspecs = rec_specs(cfg, True), make_block_specs(cfg, True)
+
+    def group_body(carry, gp):
+        h = carry
+        for i, kind in enumerate(pat):
+            key = f"l{i}_{kind}"
+            if kind == "rec":
+                h = rec_block_seq(gp[key], rspecs, cfg, h, compute_dtype)
+            else:
+                h = attn_block_seq(gp[key], aspecs, cfg, h, rope_cs, compute_dtype)
+        return h, None
+
+    f = remat_wrap(lambda c, gp: group_body(c, gp), remat)
+    if n_groups:
+        x, _ = jax.lax.scan(lambda c, gp: f(c, gp), x, params["groups"])
+    for kind, p_ in zip(tail, params.get("tail", [])):
+        if kind == "rec":
+            x = rec_block_seq(p_, rspecs, cfg, x, compute_dtype)
+        else:
+            x = attn_block_seq(p_, aspecs, cfg, x, rope_cs, compute_dtype)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos, positions=None):
+    compute_dtype = dt(cfg.compute_dtype)
+    b = tokens.shape[0]
+    x = embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(cfg.d_model)
+    rope_pos = jnp.broadcast_to(pos[None], (1,)).astype(jnp.int32)
+    rope_cs = _rope_tables(cfg, rope_pos, b, 1)
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    rspecs, aspecs = rec_specs(cfg, True), make_block_specs(cfg, True)
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gs = xs
+        new_gs = {}
+        for i, kind in enumerate(pat):
+            key = f"l{i}_{kind}"
+            if kind == "rec":
+                h, ns = rec_block_decode(gp[key], rspecs, cfg, h, gs[key], compute_dtype)
+            else:
+                h, ns = attn_block_decode(gp[key], aspecs, cfg, h, gs[key], rope_cs, pos, compute_dtype)
+            new_gs[key] = ns
+        return h, new_gs
+
+    new_caches: dict[str, Any] = {"tail": []}
+    if n_groups:
+        x, new_caches["groups"] = jax.lax.scan(group_body, x, (params["groups"], caches["groups"]))
+    for (kind, p_), s_ in zip(zip(tail, params.get("tail", [])), caches["tail"]):
+        if kind == "rec":
+            x, ns = rec_block_decode(p_, rspecs, cfg, x, s_, compute_dtype)
+        else:
+            x, ns = attn_block_decode(p_, aspecs, cfg, x, s_, rope_cs, pos, compute_dtype)
+        new_caches["tail"].append(ns)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(x[:, 0:1], head_weight(params, cfg).T, compute_dtype)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bfloat16,
+            max_len=None):
+    compute_dtype = dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    max_len = max_len or s
+    win = min(cfg.window or max_len, max_len)
+    x = embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(cfg.d_model)
+    x = constrain(x, BATCH, "model", None)
+    rope_cs = _rope_tables(cfg, positions, b, s)
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    rspecs, aspecs = rec_specs(cfg, True), make_block_specs(cfg, True)
+
+    def group_body(carry, gp):
+        h = carry
+        states = {}
+        for i, kind in enumerate(pat):
+            key = f"l{i}_{kind}"
+            if kind == "rec":
+                h, ns = rec_block_seq(gp[key], rspecs, cfg, h, compute_dtype, return_state=True)
+                ns = {"h": ns["h"], "conv": ns["conv"].astype(cache_dtype)}
+            else:
+                h, ns = attn_block_seq(gp[key], aspecs, cfg, h, rope_cs, compute_dtype,
+                                       return_cache=True, cache_len=win, cache_dtype=cache_dtype)
+            states[key] = ns
+        return h, states
+
+    caches: dict[str, Any] = {"tail": []}
+    if n_groups:
+        x, caches["groups"] = jax.lax.scan(group_body, x, params["groups"])
+    for kind, p_ in zip(tail, params.get("tail", [])):
+        if kind == "rec":
+            x, ns = rec_block_seq(p_, rspecs, cfg, x, compute_dtype, return_state=True)
+            ns = {"h": ns["h"], "conv": ns["conv"].astype(cache_dtype)}
+        else:
+            x, ns = attn_block_seq(p_, aspecs, cfg, x, rope_cs, compute_dtype,
+                                   return_cache=True, cache_len=win, cache_dtype=cache_dtype)
+        caches["tail"].append(ns)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(x[:, -1:], head_weight(params, cfg).T, compute_dtype)[:, 0]
+    return logits, caches
+
+
+def specs_tree(cfg: ModelConfig):
+    rsp = rec_specs(cfg, True)
+    asp = make_block_specs(cfg, True)
+    rec = {"ln1": None, "ln2": None, "conv_w": None, "conv_b": None, "lambda": None,
+           "in_x": rsp["in_x"], "in_g": rsp["in_g"], "gate_a": rsp["gate_a"],
+           "gate_x": rsp["gate_x"], "out": rsp["out"], "mlp": dict(rsp["mlp"])}
+    attn = {"ln1": None, "ln2": None, "attn": dict(asp.attn), "mlp": asp.mlp_d()}
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    tree = {"embed": None, "final_norm": None}
+    if n_groups:
+        tree["groups"] = {f"l{i}_{k}": (rec if k == "rec" else attn)
+                          for i, k in enumerate(pat)}
+    if tail:
+        tree["tail"] = [rec if k == "rec" else attn for k in tail]
+    if not cfg.tie_embeddings:
+        tree["head"] = None
+    return tree

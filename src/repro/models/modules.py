@@ -1,0 +1,413 @@
+"""Shared model building blocks.
+
+Everything is functional: ``init_*`` produce param pytrees (plain dicts),
+``apply``-style functions consume them.  Layers are stacked along a leading
+axis and iterated with ``lax.scan`` (keeps HLO size constant in depth — vital
+for 512-device dry-run compiles).
+
+The ``Linear`` abstraction is where the paper's technique plugs in: every
+linear role resolves (statically, from ``ModelConfig.ttd``/``.quant``) to
+dense | tt (Tensor-Train cores, paper §II) | int4 (weight-only quant,
+paper §IV).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, TTDConfig
+from ..core.quant import int4_matmul_ref, quantize_int4
+from ..core.tt_linear import init_tt_linear, tt_linear_apply
+from ..core.ttd import TTSpec
+from ..dist import constrain
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def dt(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Linear: dense | tt | int4
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LinearSpec:
+    kind: str  # dense | tt | int4
+    n_in: int
+    n_out: int
+    bias: bool = False
+    tt: TTSpec | None = None
+    quant_group: int = 128
+    role: str = ""
+
+
+def linear_spec(cfg: ModelConfig, role: str, n_in: int, n_out: int, bias: bool = False,
+                *, ttd_block: bool = True) -> LinearSpec:
+    """Resolve a linear role to its implementation per the paper's recipe.
+
+    ``ttd_block`` is False for blocks outside the TT-compressed range
+    (paper: 15/28 resp. 19/32 blocks compressed; the rest quant-only).
+    """
+    ttd = cfg.ttd
+    if ttd.enabled and ttd_block and role in ttd.roles:
+        ov = ttd.override_for(role)
+        try:
+            tt = TTSpec.make(
+                n_in,
+                n_out,
+                ov.rank if ov else ttd.rank,
+                d=ttd.d,
+                in_modes=ov.in_modes if ov else None,
+                out_modes=ov.out_modes if ov else None,
+            )
+            return LinearSpec("tt", n_in, n_out, bias=bias, tt=tt, role=role)
+        except ValueError:
+            pass  # un-factorizable dim: fall through to dense/int4
+    if cfg.quant.enabled and n_in % cfg.quant.group_size == 0:
+        return LinearSpec("int4", n_in, n_out, bias=bias,
+                          quant_group=cfg.quant.group_size, role=role)
+    return LinearSpec("dense", n_in, n_out, bias=bias, role=role)
+
+
+def init_linear(key: jax.Array, spec: LinearSpec, param_dtype) -> dict[str, Any]:
+    """Initialize one linear layer's params."""
+    k_w, k_b = jax.random.split(key)
+    out: dict[str, Any] = {}
+    if spec.kind == "dense":
+        std = 1.0 / math.sqrt(spec.n_in)
+        out["w"] = (jax.random.normal(k_w, (spec.n_in, spec.n_out), jnp.float32) * std).astype(param_dtype)
+    elif spec.kind == "tt":
+        out.update(init_tt_linear(k_w, spec.tt, dtype=param_dtype))
+    elif spec.kind == "int4":
+        # random int4-quantized weight (serve-path init; real use loads ckpts)
+        std = 1.0 / math.sqrt(spec.n_in)
+        w = jax.random.normal(k_w, (spec.n_out, spec.n_in), jnp.float32) * std
+        out.update(quantize_int4(w, spec.quant_group))
+    else:
+        raise ValueError(spec.kind)
+    if spec.bias:
+        out["b"] = jnp.zeros((spec.n_out,), param_dtype)
+    return out
+
+
+def apply_linear(params: dict[str, Any], x: jax.Array, spec: LinearSpec,
+                 compute_dtype=jnp.bfloat16) -> jax.Array:
+    """y = x W (+ b); x: (..., n_in) -> (..., n_out)."""
+    x = x.astype(compute_dtype)
+    if spec.kind == "dense":
+        y = jax.lax.dot_general(
+            x, params["w"].astype(compute_dtype),
+            (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(compute_dtype)
+    elif spec.kind == "tt":
+        y = tt_linear_apply(params, x, spec.tt)
+    elif spec.kind == "int4":
+        y = int4_matmul_ref(x, params)
+    else:
+        raise ValueError(spec.kind)
+    if spec.bias:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def linear_param_count(spec: LinearSpec) -> int:
+    n = spec.n_out if spec.bias else 0
+    if spec.kind == "tt":
+        return n + spec.tt.n_params()
+    return n + spec.n_in * spec.n_out
+
+
+def linear_param_bits(spec: LinearSpec, param_bits: int = 16) -> int:
+    """Storage bits (int4 weights count 4 bits + scales)."""
+    n = spec.n_out * param_bits if spec.bias else 0
+    if spec.kind == "tt":
+        return n + spec.tt.n_params() * param_bits
+    if spec.kind == "int4":
+        groups = spec.n_in // spec.quant_group
+        return n + spec.n_in * spec.n_out * 4 + spec.n_out * groups * 16
+    return n + spec.n_in * spec.n_out * param_bits
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim: int, param_dtype) -> dict[str, Any]:
+    p = {"scale": jnp.ones((dim,), param_dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), param_dtype)
+    return p
+
+
+def apply_norm(params, x, cfg: ModelConfig, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary positions (standard, partial, M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                partial: float = 1.0, mrope_sections=None) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables.
+
+    positions: (..., S) int32 — or (3, ..., S) for M-RoPE where the three
+    leading planes are (t, h, w) position ids and ``mrope_sections`` splits
+    the rotary half-dim between them (Qwen2-VL §M-RoPE).
+    Returns cos, sin of shape (..., S, rot_half).
+    """
+    rot_dim = int(head_dim * partial)
+    half = rot_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections is not None:
+        sec = np.asarray(mrope_sections)
+        assert sec.sum() == half, (sec, half)
+        sec_id = np.repeat(np.arange(len(sec)), sec)  # (half,) -> which plane
+        pos = positions.astype(jnp.float32)  # (3, ..., S)
+        angle = pos[sec_id, ..., :, None] * 0  # placeholder to get shape
+        # gather the right plane per frequency index
+        planes = jnp.stack([pos[i] for i in range(len(sec))], axis=-1)  # (...,S,3)
+        angle = planes[..., sec_id] * inv_freq  # (..., S, half)
+    else:
+        angle = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(angle), jnp.sin(angle)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, partial: float = 1.0) -> jax.Array:
+    """x: (B, S, H, Dh); cos/sin: (B, S, half) or (S, half)."""
+    dh = x.shape[-1]
+    rot = int(dh * partial)
+    half = rot // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:  # (B, S, half)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    return jnp.concatenate([o1, o2, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (pure-JAX flash: blocked online softmax; GQA; causal / SWA /
+# cross).  The Pallas equivalent would target TPU; this path is what the
+# dry-run lowers (see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+NEG_INF = -1e30
+
+
+def _block_mask(qpos, kpos, kmask, causal: bool, window: int):
+    """(qb, kb) validity mask from absolute positions."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= qpos[:, None] - kpos[None, :] < window
+    if kmask is not None:
+        m &= kmask[None, :]
+    return m
+
+
+def attention_dense(q, k, v, *, qpos, kpos, kmask=None, causal=True, window=0,
+                    scale=None):
+    """Unblocked attention for small S (decode / tiny smoke shapes).
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh); kmask: (B, Skv) or (Skv,).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale or (1.0 / math.sqrt(dh))
+    qh = q.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,Sq,Dh)
+    kh = k.transpose(0, 2, 1, 3)  # (B,Hkv,Skv,Dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh.astype(jnp.float32), kh.astype(jnp.float32)) * scale
+    mask = _block_mask(qpos, kpos, None, causal, window)  # (Sq,Skv)
+    mask = mask[None, None, None]
+    if kmask is not None:
+        km = kmask if kmask.ndim == 2 else kmask[None]
+        mask = mask & km[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    vh = v.transpose(0, 2, 1, 3)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), vh)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
+
+
+def flash_attention(q, k, v, *, qpos, kpos, kmask=None, causal=True, window=0,
+                    q_block=1024, kv_block=1024, scale=None):
+    """Blocked online-softmax attention; O(q_block·kv_block) live scores.
+
+    Shapes as in :func:`attention_dense`.  Falls back to the dense path when
+    the problem is already small.
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    if sq * skv <= max(q_block * kv_block, 1 << 21):
+        return attention_dense(q, k, v, qpos=qpos, kpos=kpos, kmask=kmask,
+                               causal=causal, window=window, scale=scale)
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale or (1.0 / math.sqrt(dh))
+
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    pad_q = (-sq) % qb
+    pad_k = (-skv) % kb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad_k), constant_values=2**30)
+        kmask = jnp.pad(kmask, (0, pad_k)) if kmask is not None else \
+            jnp.pad(jnp.ones((skv,), bool), (0, pad_k))
+    elif kmask is None:
+        kmask = jnp.ones((skv,), bool)
+    nq, nk = q.shape[1] // qb, k.shape[1] // kb
+
+    qh = q.reshape(b, nq, qb, hkv, g, dh).transpose(1, 0, 3, 4, 2, 5)  # (nq,B,Hkv,G,qb,Dh)
+    kh = k.reshape(b, nk, kb, hkv, dh).transpose(1, 0, 3, 2, 4)  # (nk,B,Hkv,kb,Dh)
+    vh = v.reshape(b, nk, kb, hkv, dh).transpose(1, 0, 3, 2, 4)
+    qpos_b = qpos.reshape(nq, qb)
+    kpos_b = kpos.reshape(nk, kb)
+    kmask_b = kmask.reshape(nk, kb)
+
+    def q_step(_, q_in):
+        qblk, qp = q_in  # (B,Hkv,G,qb,Dh), (qb,)
+
+        # checkpoint: scores are recomputed in backward instead of being
+        # stacked per (q-block × kv-block) — keeps live memory O(blocks)
+        @jax.checkpoint
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kblk, vblk, kp, km = kv_in
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = _block_mask(qp, kp, km, causal, window)[None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(acc.dtype)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full(qblk.shape[:-1], NEG_INF, jnp.float32)
+        l0 = jnp.zeros(qblk.shape[:-1], jnp.float32)
+        a0 = jnp.zeros(qblk.shape, jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kh, vh, kpos_b, kmask_b))
+        out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+        return None, out.astype(q.dtype)
+
+    _, o = jax.lax.scan(jax.checkpoint(q_step), None, (qh, qpos_b))  # (nq,B,Hkv,G,qb,Dh)
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qb, h, dh)
+    return o[:, :sq] if pad_q else o
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+def mlp_specs(cfg: ModelConfig, ttd_block: bool, d_in: int | None = None,
+              d_ff: int | None = None, prefix: str = "mlp") -> dict[str, LinearSpec]:
+    d = d_in or cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.act == "gelu_mlp":
+        return {
+            "up": linear_spec(cfg, f"{prefix}_up", d, f, bias=cfg.norm_type == "layernorm", ttd_block=ttd_block),
+            "down": linear_spec(cfg, f"{prefix}_down", f, d, bias=cfg.norm_type == "layernorm", ttd_block=ttd_block),
+        }
+    return {
+        "gate": linear_spec(cfg, f"{prefix}_gate", d, f, ttd_block=ttd_block),
+        "up": linear_spec(cfg, f"{prefix}_up", d, f, ttd_block=ttd_block),
+        "down": linear_spec(cfg, f"{prefix}_down", f, d, ttd_block=ttd_block),
+    }
+
+
+def init_mlp(key, specs: dict[str, LinearSpec], param_dtype):
+    keys = jax.random.split(key, len(specs))
+    return {nm: init_linear(k, sp, param_dtype) for (nm, sp), k in zip(specs.items(), keys)}
+
+
+def apply_mlp(params, x, specs: dict[str, LinearSpec], cfg: ModelConfig, compute_dtype):
+    # TT layers keep activations token-sharded (weights are replicated cores);
+    # dense layers use Megatron column/row TP (d_ff over `model`).
+    from ..dist.api import BATCH
+    tt_down = specs["down"].kind == "tt"
+    h_spec = (BATCH, "model", None) if tt_down else (None, None, "model")
+    if "gate" in specs:
+        g = apply_linear(params["gate"], x, specs["gate"], compute_dtype)
+        u = apply_linear(params["up"], x, specs["up"], compute_dtype)
+        act = jax.nn.silu if cfg.act == "swiglu" else partial(jax.nn.gelu, approximate=True)
+        h = act(g.astype(jnp.float32)).astype(compute_dtype) * u
+        h = constrain(h, *h_spec)
+        return apply_linear(params["down"], h, specs["down"], compute_dtype)
+    h = apply_linear(params["up"], x, specs["up"], compute_dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(compute_dtype)
+    h = constrain(h, *h_spec)
+    return apply_linear(params["down"], h, specs["down"], compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding.  Vocab is sharded over `model`; GSPMD turns the
+# masked formulation below into local-gather + AllReduce instead of
+# all-gathering the table (important for 163k×7168 tables).
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig, param_dtype):
+    std = 1.0 / math.sqrt(cfg.d_model)
+    p = {"table": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32) * std).astype(param_dtype)}
+    return p
+
+
+def embed_lookup(params, ids, compute_dtype):
+    table = params["table"]
+    out = jnp.take(table, ids, axis=0).astype(compute_dtype)
+    return out
+
+
+def unembed(x, table, compute_dtype):
+    """x: (..., D) -> logits (..., V)  (tied path uses embed table)."""
+    return jax.lax.dot_general(
+        x.astype(compute_dtype), table.astype(compute_dtype),
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacking / scan helpers
+# ---------------------------------------------------------------------------
+def stack_init(init_fn, key, n: int):
+    """vmap an init function over ``n`` layer keys -> stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save nothing

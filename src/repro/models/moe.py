@@ -1,0 +1,337 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Three execution paths, picked statically from shapes/mesh:
+
+- ``ep``     sort-based capacity-limited dispatch with ``all_to_all`` over the
+             ``model`` axis inside ``shard_map`` (train/prefill: tokens are
+             sharded over data×model, experts over model).  This is the
+             production path whose collectives the roofline measures.
+- ``ep_psum``every device applies only its *local* experts to all its tokens,
+             masked by the router, then ``psum`` over ``model`` — used when
+             the local token count can't shard over ``model`` (decode cells).
+- ``dense``  every expert applied to every token (tiny smoke tests only; also
+             the correctness oracle for the ep paths).
+
+Expert weights may be TT-compressed (paper technique applied to experts —
+the dominant parameter mass in MoE archs; cores stay replicated over data,
+sharded over model on the expert dim only).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..config import ModelConfig
+from ..dist.api import batch_axes, current_abstract_mesh
+from .modules import LinearSpec, apply_mlp, init_mlp, linear_spec, mlp_specs, stack_init
+
+
+# ---------------------------------------------------------------------------
+# Specs / init
+# ---------------------------------------------------------------------------
+def moe_specs(cfg: ModelConfig, ttd_block: bool) -> dict[str, Any]:
+    e_specs = mlp_specs(cfg, ttd_block, d_in=cfg.d_model, d_ff=cfg.d_ff_expert,
+                        prefix="expert")
+    return {"router": linear_spec(cfg, "router", cfg.d_model, cfg.n_experts),
+            "expert": e_specs}
+
+
+def init_moe(key, cfg: ModelConfig, specs, param_dtype):
+    k_r, k_e = jax.random.split(key)
+    from .modules import init_linear
+
+    return {
+        "router": init_linear(k_r, specs["router"], jnp.float32),
+        "experts": stack_init(
+            lambda k: init_mlp(k, specs["expert"], param_dtype), k_e, cfg.n_experts
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+def _route(params, x, specs, cfg: ModelConfig):
+    """x: (T, D) -> probs (T,E) f32, gates (T,K), eids (T,K)."""
+    from .modules import apply_linear
+
+    logits = apply_linear(params["router"], x, specs["router"], jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, eids = jax.lax.top_k(probs, cfg.experts_per_token)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return probs, gates, eids
+
+
+def _aux_loss(probs, eids, cfg: ModelConfig, axes):
+    """Switch-style load-balance loss, averaged over all token shards."""
+    e = cfg.n_experts
+    me = probs.mean(0)  # (E,)
+    hits = jnp.zeros((e,), jnp.float32).at[eids.reshape(-1)].add(1.0)
+    ce = hits / jnp.maximum(hits.sum(), 1.0)
+    if axes:
+        me = jax.lax.pmean(me, axes)
+        ce = jax.lax.pmean(ce, axes)
+    return e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+
+EXPERT_CHUNK = 128  # capacity-dim chunk: bounds expert-FFN live intermediates
+
+
+def _expert_ffn(expert_params, xb, specs, cfg, compute_dtype):
+    """vmapped per-expert MLP: params stacked (E, ...), xb (E, C, D).
+
+    The capacity dim is scanned in checkpointed chunks so the per-expert
+    intermediates (TT stage tensors / d_ff activations) stay bounded — the
+    XLA-side analogue of the Pallas kernel's block_b."""
+    e, c, d = xb.shape
+
+    def ffn(t):
+        return jax.vmap(lambda p, u: apply_mlp(p, u, specs["expert"], cfg, compute_dtype))(
+            expert_params, t)
+
+    if c <= EXPERT_CHUNK or c % EXPERT_CHUNK != 0:
+        return ffn(xb)
+    nc = c // EXPERT_CHUNK
+    xs = jnp.moveaxis(xb.reshape(e, nc, EXPERT_CHUNK, d), 1, 0)
+
+    @jax.checkpoint
+    def body(_, xc):
+        return None, ffn(xc)
+
+    _, ys = jax.lax.scan(body, None, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(e, c, ys.shape[-1])
+
+
+def _excl_cumsum(x):
+    c = jnp.cumsum(x)
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), c[:-1]])
+
+
+# ---------------------------------------------------------------------------
+# dense path (oracle / tiny tests)
+# ---------------------------------------------------------------------------
+def _moe_dense(params, x, specs, cfg: ModelConfig, compute_dtype):
+    t, d = x.shape
+    probs, gates, eids = _route(params, x, specs, cfg)
+    combine = jnp.zeros((t, cfg.n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(t)[:, None], eids].add(gates)
+    ys = _expert_ffn(params["experts"], jnp.broadcast_to(x, (cfg.n_experts, t, d)),
+                     specs, cfg, compute_dtype)  # (E, T, D)
+    y = jnp.einsum("te,etd->td", combine.astype(compute_dtype), ys)
+    return y, _aux_loss(probs, eids, cfg, axes=None)
+
+
+# ---------------------------------------------------------------------------
+# ep_psum path (decode / tokens not shardable over model)
+# ---------------------------------------------------------------------------
+def _moe_ep_psum(params_local, x, specs, cfg: ModelConfig, compute_dtype, e_l,
+                 replicas: int = 1):
+    t, d = x.shape
+    probs, gates, eids = _route(params_local, x, specs, cfg)
+    combine = jnp.zeros((t, cfg.n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(t)[:, None], eids].add(gates)
+    if replicas > 1:  # each expert computed on `replicas` shards: split gate
+        combine = jnp.tile(combine, (1, replicas)) / replicas
+    shard = jax.lax.axis_index("model")
+    g_local = jax.lax.dynamic_slice(combine, (0, shard * e_l), (t, e_l))
+    ys = _expert_ffn(params_local["experts"],
+                     jnp.broadcast_to(x, (e_l, t, d)), specs, cfg, compute_dtype)
+    y = jnp.einsum("te,etd->td", g_local.astype(compute_dtype), ys)
+    y = jax.lax.psum(y, "model")
+    aux = _aux_loss(probs, eids, cfg, axes=None)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# ep path: sort + all_to_all (train / prefill)
+# ---------------------------------------------------------------------------
+def _moe_ep(params_local, x, specs, cfg: ModelConfig, compute_dtype, e_l, n_shards,
+            aux_axes, replicas: int = 1):
+    """``replicas`` > 1: each physical expert is duplicated across
+    ``replicas`` shards (expert data parallelism for E < n_shards, e.g.
+    mixtral's 8 experts on TP=16).  Routing uses virtual expert ids
+    v = e + E·(assignment_index mod replicas) to load-balance the copies;
+    weight gradients sync automatically because the copies are produced by
+    tiling (whose transpose is a sum)."""
+    t, d = x.shape
+    k = cfg.experts_per_token
+    tk = t * k
+    e = cfg.n_experts * replicas
+
+    probs, gates, eids = _route(params_local, x, specs, cfg)
+
+    # --- sort assignments by destination (virtual) expert ---
+    flat_e = eids.reshape(tk)
+    if replicas > 1:
+        flat_e = flat_e + cfg.n_experts * (jnp.arange(tk, dtype=flat_e.dtype) % replicas)
+    order = jnp.argsort(flat_e, stable=True)
+    fe_s = flat_e[order]
+    tok_s = order // k
+    gate_s = gates.reshape(tk)[order]
+
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    dest = fe_s // e_l  # destination model-shard
+    shard_counts = counts.reshape(n_shards, e_l).sum(1)
+    pos_in_dest = jnp.arange(tk, dtype=jnp.int32) - _excl_cumsum(shard_counts)[dest]
+
+    cap_send = int(math.ceil(tk / n_shards * cfg.capacity_factor / 8)) * 8
+    oob = jnp.where(pos_in_dest < cap_send, pos_in_dest, cap_send)  # OOB -> drop
+
+    send_x = jnp.zeros((n_shards, cap_send, d), compute_dtype)
+    send_x = send_x.at[dest, oob].set(x[tok_s].astype(compute_dtype), mode="drop")
+    send_eid = jnp.full((n_shards, cap_send), e_l, jnp.int32)  # e_l = invalid
+    send_eid = send_eid.at[dest, oob].set(fe_s % e_l, mode="drop")
+
+    # --- exchange over the model axis ---
+    recv_x = jax.lax.all_to_all(send_x, "model", split_axis=0, concat_axis=0, tiled=True)
+    recv_eid = jax.lax.all_to_all(send_eid[..., None], "model", split_axis=0,
+                                  concat_axis=0, tiled=True)[..., 0]
+
+    # --- bucket received tokens per local expert ---
+    r = n_shards * cap_send
+    r_x = recv_x.reshape(r, d)
+    r_e = recv_eid.reshape(r)
+    order2 = jnp.argsort(r_e, stable=True)  # invalid (e_l) sort last
+    e2_s = r_e[order2]
+    counts2 = jnp.zeros((e_l,), jnp.int32).at[jnp.where(r_e < e_l, r_e, 0)].add(
+        (r_e < e_l).astype(jnp.int32))
+    cap_e = int(math.ceil(r / e_l * cfg.capacity_factor / EXPERT_CHUNK)) * EXPERT_CHUNK
+    pos2 = jnp.arange(r, dtype=jnp.int32) - _excl_cumsum(counts2)[jnp.where(e2_s < e_l, e2_s, 0)]
+    pos2 = jnp.where((e2_s < e_l) & (pos2 < cap_e), pos2, cap_e)  # OOB -> drop
+    e2_idx = jnp.where(e2_s < e_l, e2_s, 0)
+
+    buf = jnp.zeros((e_l, cap_e, d), compute_dtype)
+    buf = buf.at[e2_idx, pos2].set(r_x[order2], mode="drop")
+
+    h = _expert_ffn(params_local["experts"], buf, specs, cfg, compute_dtype)
+
+    # --- un-bucket, send back, combine ---
+    y_sorted = h.at[e2_idx, pos2].get(mode="fill", fill_value=0)  # (R, D)
+    y_slots = jnp.zeros((r, d), compute_dtype).at[order2].set(y_sorted)
+    back = jax.lax.all_to_all(y_slots.reshape(n_shards, cap_send, d), "model",
+                              split_axis=0, concat_axis=0, tiled=True)
+    contrib = back.at[dest, oob].get(mode="fill", fill_value=0)  # (TK, D)
+    y = jnp.zeros((t, d), jnp.float32)
+    y = y.at[tok_s].add(contrib.astype(jnp.float32) * gate_s[:, None])
+
+    aux = _aux_loss(probs, eids, cfg, axes=aux_axes)
+    return y.astype(compute_dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# tp path: experts column/row-sharded over `model` (used when the expert
+# count doesn't divide the model axis, e.g. mixtral's 8 experts on TP=16).
+# All experts run on all tokens (E/topk compute overhead — a hillclimb
+# candidate, see EXPERIMENTS.md §Perf); token chunks are scanned to bound
+# the live intermediates.
+# ---------------------------------------------------------------------------
+def _moe_tp(params, x, specs, cfg: ModelConfig, compute_dtype):
+    from ..dist.api import BATCH
+    from ..dist import constrain
+
+    t, d = x.shape
+    probs, gates, eids = _route(params, x, specs, cfg)
+    combine = jnp.zeros((t, cfg.n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(t)[:, None], eids].add(gates)
+
+    chunk = EXPERT_CHUNK
+    if t <= chunk or t % chunk != 0:
+        ys = _expert_ffn(params["experts"],
+                         jnp.broadcast_to(x, (cfg.n_experts, t, d)),
+                         specs, cfg, compute_dtype)
+        y = jnp.einsum("te,etd->td", combine.astype(compute_dtype), ys)
+        return y, _aux_loss(probs, eids, cfg, axes=None)
+
+    nc = t // chunk
+    xs = x.reshape(nc, chunk, d)
+    cs = combine.reshape(nc, chunk, cfg.n_experts).astype(compute_dtype)
+
+    @jax.checkpoint
+    def body(_, inp):
+        xc, cc = inp
+        ye = _expert_ffn(params["experts"],
+                         jnp.broadcast_to(xc, (cfg.n_experts, chunk, d)),
+                         specs, cfg, compute_dtype)
+        return None, jnp.einsum("te,etd->td", cc, ye)
+
+    _, ys = jax.lax.scan(body, None, (xs, cs))
+    return ys.reshape(t, d), _aux_loss(probs, eids, cfg, axes=None)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def apply_moe(params, x, specs, cfg: ModelConfig, compute_dtype):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Chooses dense (no mesh) / ep (tokens shard over model) / ep_psum /
+    tp (expert count below the model-axis size).
+    """
+    b, s, d = x.shape
+    mesh = current_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names or cfg.moe_impl == "dense":
+        y, aux = _moe_dense(params, x.reshape(b * s, d), specs, cfg, compute_dtype)
+        return y.reshape(b, s, d), aux
+
+    n_shards = mesh.shape["model"]
+    replicas = 1
+    if cfg.moe_impl == "tp" or cfg.n_experts % n_shards != 0:
+        if cfg.moe_impl != "tp" and n_shards % cfg.n_experts == 0:
+            # replicated-expert EP: duplicate each expert across
+            # n_shards/E shards (virtual experts), keep the all_to_all path
+            replicas = n_shards // cfg.n_experts
+        else:
+            # TP-expert fallback (pure GSPMD, no island): expert weights
+            # shard d_ff over `model`, tokens stay batch-sharded
+            from ..dist.api import BATCH
+            from ..dist import constrain
+            x2 = constrain(x, BATCH, None, None)
+            y, aux = _moe_tp(params, x2.reshape(b * s, d), specs, cfg, compute_dtype)
+            y = constrain(y.reshape(b, s, d), BATCH, "model", None)
+            return y, aux
+
+    e_l = cfg.n_experts * replicas // n_shards
+    baxes = batch_axes()
+    baxes = baxes if isinstance(baxes, tuple) else (baxes,)
+    baxes = tuple(a for a in baxes if a in mesh.axis_names)
+    b_shards = math.prod(mesh.shape[a] for a in baxes) if baxes else 1
+
+    batch_ok = bool(baxes) and b % b_shards == 0
+    tokens_ok = batch_ok and ((b // b_shards) * s) % n_shards == 0 and s >= n_shards
+    spec_in = P(baxes if batch_ok else None,
+                "model" if tokens_ok and s % n_shards == 0 else None, None)
+    expert_params = params["experts"]
+    if replicas > 1:
+        # expert data parallelism: tile copies (transpose of tile = sum, so
+        # the copies' gradients merge automatically)
+        expert_params = jax.tree.map(
+            lambda a: jnp.tile(a, (replicas,) + (1,) * (a.ndim - 1)), expert_params)
+    expert_spec = jax.tree.map(lambda _: P("model"), expert_params)
+    router_spec = jax.tree.map(lambda _: P(), params["router"])
+    in_specs = ({"experts": expert_spec, "router": router_spec}, spec_in)
+    out_specs = (spec_in, P())
+
+    use_ep = tokens_ok and s % n_shards == 0 and cfg.moe_impl == "ep"
+
+    def island(p_local, x_local):
+        bl, sl, _ = x_local.shape
+        xt = x_local.reshape(bl * sl, d)
+        if use_ep:
+            y, aux = _moe_ep(p_local, xt, specs, cfg, compute_dtype, e_l, n_shards,
+                             aux_axes=tuple(baxes) + ("model",), replicas=replicas)
+        else:
+            y, aux = _moe_ep_psum(p_local, xt, specs, cfg, compute_dtype, e_l,
+                                  replicas=replicas)
+            if baxes:
+                aux = jax.lax.pmean(aux, tuple(baxes))
+        return y.reshape(bl, sl, d), aux
+
+    y, aux = jax.shard_map(
+        island, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    )({"experts": expert_params, "router": params["router"]}, x)
+    return y, aux

@@ -1,0 +1,356 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay
+(arXiv:2404.05892).  The paper's TTD technique applies to its linear
+projections (channel-mix K/V and time-mix output are the big ones).
+
+Time-mix recurrence per head (state S ∈ R^{dk×dv}):
+
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+
+with per-token per-channel decay w_t = exp(-exp(w0 + tanh(x_w W_d1) W_d2))
+and token-shift ddlerp mixing (LoRA-modulated).  Train/prefill use the
+chunked-parallel wkv form (16-token chunks of batched matmuls, S/16 scan
+steps — MXU work instead of a latency-bound length-S loop; exact vs the
+sequential oracle); decode is the one-step update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from ..dist import constrain
+from ..dist.api import BATCH
+from .modules import (
+    apply_linear, apply_norm, dt, embed_lookup, init_embed, init_linear,
+    init_norm, linear_spec, remat_wrap, stack_init, unembed,
+)
+
+MIX_COMPONENTS = ("w", "k", "v", "r", "g")
+
+
+# ---------------------------------------------------------------------------
+# Specs / init
+# ---------------------------------------------------------------------------
+def rwkv_specs(cfg: ModelConfig, ttd_block: bool = True):
+    d = cfg.d_model
+    return {
+        "tm": {
+            "r": linear_spec(cfg, "tm_r", d, d, ttd_block=ttd_block),
+            "k": linear_spec(cfg, "tm_k", d, d, ttd_block=ttd_block),
+            "v": linear_spec(cfg, "tm_v", d, d, ttd_block=ttd_block),
+            "g": linear_spec(cfg, "tm_g", d, d, ttd_block=ttd_block),
+            "o": linear_spec(cfg, "tm_out", d, d, ttd_block=ttd_block),
+        },
+        "cm": {
+            "k": linear_spec(cfg, "cm_key", d, cfg.d_ff, ttd_block=ttd_block),
+            "v": linear_spec(cfg, "cm_value", cfg.d_ff, d, ttd_block=ttd_block),
+            "r": linear_spec(cfg, "cm_r", d, d, ttd_block=ttd_block),
+        },
+    }
+
+
+def init_rwkv_block(key, cfg: ModelConfig, specs, param_dtype):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    ks = jax.random.split(key, 16)
+    tm = {nm: init_linear(k, sp, param_dtype) for (nm, sp), k in zip(specs["tm"].items(), ks[:5])}
+    cm = {nm: init_linear(k, sp, param_dtype) for (nm, sp), k in zip(specs["cm"].items(), ks[5:8])}
+    lm, ld = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    p = {
+        "ln1": init_norm(cfg, d, param_dtype),
+        "ln2": init_norm(cfg, d, param_dtype),
+        "tm": tm,
+        "cm": cm,
+        "mu_base": jnp.full((d,), 0.5, param_dtype),
+        "mu": jnp.full((5, d), 0.5, param_dtype),
+        "mix_w1": (jax.random.normal(ks[8], (d, 5 * lm), jnp.float32) * 0.01).astype(param_dtype),
+        "mix_w2": (jax.random.normal(ks[9], (5, lm, d), jnp.float32) * 0.01).astype(param_dtype),
+        "decay_w0": jnp.full((d,), -3.0, param_dtype),
+        "decay_w1": (jax.random.normal(ks[10], (d, ld), jnp.float32) * 0.01).astype(param_dtype),
+        "decay_w2": (jax.random.normal(ks[11], (ld, d), jnp.float32) * 0.01).astype(param_dtype),
+        "bonus_u": (jax.random.normal(ks[12], (d,), jnp.float32) * 0.1).astype(param_dtype),
+        "ln_x": {"scale": jnp.ones((d,), param_dtype), "bias": jnp.zeros((d,), param_dtype)},
+        "mu_cm_k": jnp.full((d,), 0.5, param_dtype),
+        "mu_cm_r": jnp.full((d,), 0.5, param_dtype),
+    }
+    return p
+
+
+def init_lm(key, cfg: ModelConfig):
+    param_dtype = dt(cfg.param_dtype)
+    k_e, k_b, k_h = jax.random.split(key, 3)
+    specs = rwkv_specs(cfg)
+    params = {
+        "embed": init_embed(k_e, cfg, param_dtype),
+        "blocks": stack_init(lambda k: init_rwkv_block(k, cfg, specs, param_dtype), k_b, cfg.n_layers),
+        "final_norm": init_norm(cfg, cfg.d_model, param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        std = 1.0 / math.sqrt(cfg.d_model)
+        params["head"] = {"w": (jax.random.normal(k_h, (cfg.d_model, cfg.vocab_size), jnp.float32) * std).astype(param_dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Token shift + ddlerp
+# ---------------------------------------------------------------------------
+def _ddlerp(p, x, x_prev, compute_dtype):
+    """Returns dict comp -> mixed input (B,S,D), and xx = x_prev - x."""
+    xx = x_prev - x
+    base = x + xx * p["mu_base"].astype(compute_dtype)
+    lm = p["mix_w1"].shape[1] // 5
+    a = jnp.tanh(jax.lax.dot_general(base, p["mix_w1"].astype(compute_dtype),
+                                     (((2,), (0,)), ((), ()))))
+    a = a.reshape(*a.shape[:-1], 5, lm)  # (B,S,5,lm)
+    off = jnp.einsum("bscl,cld->cbsd", a, p["mix_w2"].astype(compute_dtype))
+    mixed = {}
+    for i, c in enumerate(MIX_COMPONENTS):
+        mu_c = p["mu"][i].astype(compute_dtype) + off[i]
+        mixed[c] = x + xx * mu_c
+    return mixed
+
+
+def _decay(p, x_w, compute_dtype):
+    """Per-token per-channel decay w_t ∈ (0,1): exp(-exp(·))."""
+    dd = jnp.tanh(x_w.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32)) @ \
+        p["decay_w2"].astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(p["decay_w0"].astype(jnp.float32) + dd, -20.0, 8.0))
+    return jnp.exp(log_w)  # (B,S,D) in (0,1)
+
+
+def _group_norm(p, y, n_heads, eps=1e-5):
+    """Per-head LayerNorm on (B,S,H,hd) flattened back to (B,S,D)."""
+    b, s, h, hd = y.shape
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(b, s, h * hd)
+    return yn * p["ln_x"]["scale"].astype(jnp.float32) + p["ln_x"]["bias"].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Time mix
+# ---------------------------------------------------------------------------
+def _wkv_scan(r, k, v, w, u, state0):
+    """Sequential recurrence over time.
+
+    r,k,v,w: (B,S,H,hd);  u: (H,hd);  state0: (B,H,hd,hd) f32.
+    Returns y (B,S,H,hd) f32 and final state.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None] [..., None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+WKV_CHUNK = 16  # chunked-parallel wkv: scan steps drop S -> S/WKV_CHUNK.
+# 16 keeps the within-chunk cumulative log-decay range <= 16*4.9 < 88 (f32
+# exp range) together with the decay floor below.
+WKV_LOG_DECAY_FLOOR = -4.9  # w >= 0.0075/step; state is ~0 within 3 steps
+# at the floor anyway, so the approximation is practically invisible.
+
+
+def _wkv_chunked(r, k, v, w, u, state0, chunk=WKV_CHUNK):
+    """Chunked-parallel form of the wkv recurrence (Finch/GLA-style).
+
+    Within a chunk of length C, with per-channel cumulative log-decay
+    ``la_t = Σ_{τ≤t} log w_τ`` (la over *preceding* steps inside the chunk):
+
+        y_t = (r_t ⊙ e^{la_t}) S_chunk0
+              + Σ_{τ<t} [(r_t ⊙ e^{la_t}) · (k_τ ⊙ e^{-la_{τ+1}})] v_τ
+              + (r_t · (u ⊙ k_t)) v_t
+        S' = e^{la_C} ⊙ S + Σ_τ (k_τ ⊙ e^{la_C - la_{τ+1}})^T v_τ
+
+    turning S sequential steps into S/C scan steps of batched matmuls (MXU
+    work instead of a latency-bound loop).  Exact vs the sequential scan
+    (tests/test_rwkv_chunked.py); all math in f32.
+    """
+    b, s, h, hd = r.shape
+    nc = s // chunk
+    f32 = jnp.float32
+
+    def cshape(t):
+        return t.astype(f32).reshape(b, nc, chunk, h, hd)
+
+    rc, kc, vc = cshape(r), cshape(k), cshape(v)
+    lw = jnp.clip(jnp.log(jnp.maximum(cshape(w), 1e-38)), WKV_LOG_DECAY_FLOOR, 0.0)
+    la_inc = jnp.cumsum(lw, axis=2)  # la_{τ+1}: includes step τ's decay
+    la_exc = la_inc - lw  # la_t: decay accumulated before step t
+    la_end = la_inc[:, :, -1]  # (b, nc, h, hd)
+
+    r_tld = rc * jnp.exp(la_exc)
+    k_tld = kc * jnp.exp(-la_inc)
+    k_end = kc * jnp.exp(la_end[:, :, None] - la_inc)  # bounded (<= k)
+
+    scores = jnp.einsum("bnthd,bnshd->bnhts", r_tld, k_tld)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rc, u.astype(f32), kc)
+    intra = jnp.einsum("bnhts,bnshd->bnthd", scores, vc) + diag[..., None] * vc
+
+    def chunk_step(s_c, inp):
+        r_t, ke, vcc, lae = inp  # (b,chunk,h,hd) x3, (b,h,hd)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", r_t, s_c)
+        s_new = s_c * jnp.exp(lae)[..., None] + jnp.einsum("bthk,bthv->bhkv", ke, vcc)
+        return s_new, y_inter
+
+    xs = (jnp.moveaxis(r_tld, 1, 0), jnp.moveaxis(k_end, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(la_end, 1, 0))
+    state, y_inter = jax.lax.scan(chunk_step, state0.astype(f32), xs)
+    y = intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, s, h, hd), state
+
+
+def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype):
+    """x: (B,S,D); x_prev: (B,1,D) last token of previous chunk (zeros at t=0);
+    state0: (B,H,hd,hd).  Returns (y, last_x, new_state).
+
+    The wkv recurrence scans over time, so the seq dim must be LOCAL during
+    the scan; r/k/v/w are resharded seq→heads around it (batch-only
+    intermediate hop, same pattern as the RG-LRU block — scanning over a
+    model-sharded seq dim otherwise gathers every operand per step,
+    EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x, shifted, compute_dtype)
+    r = apply_linear(p["tm"]["r"], mixed["r"], specs["tm"]["r"], compute_dtype)
+    k = apply_linear(p["tm"]["k"], mixed["k"], specs["tm"]["k"], compute_dtype)
+    v = apply_linear(p["tm"]["v"], mixed["v"], specs["tm"]["v"], compute_dtype)
+    g = jax.nn.silu(apply_linear(p["tm"]["g"], mixed["g"], specs["tm"]["g"], compute_dtype).astype(jnp.float32))
+    w = _decay(p, mixed["w"], compute_dtype)
+
+    def to_heads(t):
+        t = constrain(t, BATCH, None, None)  # hop 1: gather seq
+        t = t.reshape(b, s, h, hd)
+        return constrain(t, BATCH, None, "model", None)  # hop 2: shard heads
+
+    u = p["bonus_u"].astype(jnp.float32).reshape(h, hd)
+    wkv = _wkv_chunked if (s % WKV_CHUNK == 0 and s > WKV_CHUNK) else _wkv_scan
+    y, state = wkv(to_heads(r), to_heads(k), to_heads(v), to_heads(w), u, state0)
+    y = constrain(y, BATCH, None, "model", None)
+    y = _group_norm(p, y, h)  # per-head LN: local under head sharding
+    y = y.astype(compute_dtype)
+    y = constrain(y, BATCH, None, None)  # reverse hops for the TT out-proj
+    y = constrain(y, BATCH, "model", None)
+    y = y * g.astype(compute_dtype)  # gate is token-sharded; multiply after hop
+    y = apply_linear(p["tm"]["o"], y, specs["tm"]["o"], compute_dtype)
+    return y, x[:, -1:], state
+
+
+def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype):
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xx = shifted - x
+    xk = x + xx * p["mu_cm_k"].astype(compute_dtype)
+    xr = x + xx * p["mu_cm_r"].astype(compute_dtype)
+    k = apply_linear(p["cm"]["k"], xk, specs["cm"]["k"], compute_dtype)
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(compute_dtype)
+    if specs["cm"]["v"].kind == "tt":
+        k = constrain(k, BATCH, "model", None)
+    else:
+        k = constrain(k, BATCH, None, "model")
+    kv = apply_linear(p["cm"]["v"], k, specs["cm"]["v"], compute_dtype)
+    rgate = jax.nn.sigmoid(apply_linear(p["cm"]["r"], xr, specs["cm"]["r"], compute_dtype).astype(jnp.float32))
+    return (rgate * kv.astype(jnp.float32)).astype(compute_dtype), x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Blocks / model
+# ---------------------------------------------------------------------------
+def apply_block(p, specs, cfg: ModelConfig, x, state, compute_dtype):
+    """state: {"wkv": (B,H,hd,hd), "x_tm": (B,1,D), "x_cm": (B,1,D)}."""
+    h = apply_norm(p["ln1"], x, cfg)
+    y, last_tm, wkv = time_mix(p, specs, cfg, h, state["x_tm"], state["wkv"], compute_dtype)
+    x = x + y.astype(x.dtype)
+    x = constrain(x, BATCH, None, None)
+    h = apply_norm(p["ln2"], x, cfg)
+    y, last_cm = channel_mix(p, specs, cfg, h, state["x_cm"], compute_dtype)
+    x = x + y.astype(x.dtype)
+    x = constrain(x, BATCH, None, None)
+    return x, {"wkv": wkv, "x_tm": last_tm, "x_cm": last_cm}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+        "x_cm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
+            state=None, return_state=False):
+    compute_dtype = dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, None, None)
+    specs = rwkv_specs(cfg)
+    if state is None:
+        state = init_state(cfg, b, compute_dtype)
+
+    def body(carry, xs):
+        layer_params, layer_state = xs
+        y, new_state = apply_block(layer_params, specs, cfg, carry, layer_state, compute_dtype)
+        return y, new_state
+
+    f = remat_wrap(body, remat)
+    x, new_state = jax.lax.scan(lambda c, p_: f(c, p_), x, (params["blocks"], state))
+    x = apply_norm(params["final_norm"], x, cfg)
+    if return_state:
+        return x, new_state
+    return x, jnp.zeros((), jnp.float32)
+
+
+def head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    del max_len  # O(1) state — the whole point for long_500k
+    return init_state(cfg, batch, cache_dtype)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, pos, positions=None):
+    """One-token decode: state is O(1) in sequence length."""
+    del pos, positions
+    x, new_state = forward(params, cfg, tokens, state=jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype != jnp.int32 else a, state),
+        return_state=True)
+    logits = unembed(x[:, -1:], head_weight(params, cfg).T, dt(cfg.compute_dtype))[:, 0]
+    new_state = jax.tree.map(lambda a, b: a.astype(b.dtype), new_state, state)
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bfloat16,
+            max_len=None):
+    x, new_state = forward(params, cfg, tokens, return_state=True)
+    logits = unembed(x[:, -1:], head_weight(params, cfg).T, dt(cfg.compute_dtype))[:, 0]
+    ref = init_state(cfg, tokens.shape[0], cache_dtype)
+    return logits, jax.tree.map(lambda a, b: a.astype(b.dtype), new_state, ref)
+
+
+def specs_tree(cfg: ModelConfig):
+    sp = rwkv_specs(cfg)
+    block = {k: None for k in ("ln1", "ln2", "mu_base", "mu", "mix_w1", "mix_w2",
+                               "decay_w0", "decay_w1", "decay_w2", "bonus_u",
+                               "ln_x", "mu_cm_k", "mu_cm_r")}
+    block["tm"] = dict(sp["tm"])
+    block["cm"] = dict(sp["cm"])
+    tree = {"embed": None, "blocks": block, "final_norm": None}
+    if not cfg.tie_embeddings:
+        tree["head"] = None
+    return tree

@@ -1,0 +1,376 @@
+"""Decoder-only transformer family: dense, MoE, and M-RoPE (VLM backbone).
+
+Covers kimi-k2, mixtral, phi4-mini, tinyllama, qwen1.5-110b, granite-3,
+qwen2-vl, chatglm3-6b, llama2-7b.  Layers are stacked and scanned; the layer
+stack is split into *segments* so the paper's "compress only k of L blocks"
+recipe keeps scan homogeneity (each segment is internally homogeneous).
+
+Sequence-parallel convention: between blocks activations are sharded
+(batch → data/pod, seq → model); inside attention/MLP the seq dim is gathered
+and heads / d_ff take over the model axis (Megatron-SP, driven purely by
+sharding constraints — XLA inserts the all-gather / reduce-scatter pairs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ModelConfig
+from ..dist import constrain
+from ..dist.api import BATCH
+from .modules import (
+    LinearSpec,
+    apply_linear,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    attention_dense,
+    dt,
+    embed_lookup,
+    flash_attention,
+    init_embed,
+    init_linear,
+    init_mlp,
+    init_norm,
+    linear_spec,
+    mlp_specs,
+    remat_wrap,
+    rope_angles,
+    stack_init,
+    unembed,
+)
+from .moe import apply_moe, init_moe, moe_specs
+
+
+# ---------------------------------------------------------------------------
+# Static block specs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BlockSpecs:
+    attn: tuple[tuple[str, LinearSpec], ...]
+    mlp: tuple[tuple[str, LinearSpec], ...] | None
+    moe: Any | None  # dict from moe_specs (hashable enough for our use)
+
+    def attn_d(self):
+        return dict(self.attn)
+
+    def mlp_d(self):
+        return dict(self.mlp) if self.mlp is not None else None
+
+
+def make_block_specs(cfg: ModelConfig, ttd_block: bool) -> BlockSpecs:
+    attn = (
+        ("wq", linear_spec(cfg, "attn_q", cfg.d_model, cfg.q_dim, bias=cfg.qkv_bias, ttd_block=ttd_block)),
+        ("wk", linear_spec(cfg, "attn_k", cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias, ttd_block=ttd_block)),
+        ("wv", linear_spec(cfg, "attn_v", cfg.d_model, cfg.kv_dim, bias=cfg.qkv_bias, ttd_block=ttd_block)),
+        ("wo", linear_spec(cfg, "attn_o", cfg.q_dim, cfg.d_model, ttd_block=ttd_block)),
+    )
+    if cfg.family == "moe":
+        return BlockSpecs(attn, None, moe_specs(cfg, ttd_block))
+    return BlockSpecs(attn, tuple(mlp_specs(cfg, ttd_block).items()), None)
+
+
+def segment_plan(cfg: ModelConfig) -> list[tuple[int, bool]]:
+    """[(n_layers, ttd_enabled_for_these_blocks), ...]"""
+    ft = cfg.ttd.first_tt_block if cfg.ttd.enabled else cfg.n_layers
+    ft = max(0, min(ft, cfg.n_layers))
+    segs = []
+    if ft > 0:
+        segs.append((ft, False))
+    if cfg.n_layers - ft > 0:
+        segs.append((cfg.n_layers - ft, True))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_block(key, cfg: ModelConfig, specs: BlockSpecs, param_dtype):
+    keys = jax.random.split(key, 6)
+    p = {
+        "ln1": init_norm(cfg, cfg.d_model, param_dtype),
+        "ln2": init_norm(cfg, cfg.d_model, param_dtype),
+        "attn": {nm: init_linear(k, sp, param_dtype)
+                 for (nm, sp), k in zip(specs.attn, jax.random.split(keys[0], 4))},
+    }
+    if specs.moe is not None:
+        p["moe"] = init_moe(keys[1], cfg, specs.moe, param_dtype)
+    else:
+        p["mlp"] = init_mlp(keys[1], specs.mlp_d(), param_dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig):
+    param_dtype = dt(cfg.param_dtype)
+    keys = jax.random.split(key, 4 + len(segment_plan(cfg)))
+    params: dict[str, Any] = {"embed": init_embed(keys[0], cfg, param_dtype)}
+    segments = []
+    for i, (n, ttd_on) in enumerate(segment_plan(cfg)):
+        specs = make_block_specs(cfg, ttd_on)
+        segments.append(stack_init(lambda k, s=specs: init_block(k, cfg, s, param_dtype), keys[2 + i], n))
+    params["segments"] = segments
+    params["final_norm"] = init_norm(cfg, cfg.d_model, param_dtype)
+    if not cfg.tie_embeddings:
+        std = 1.0 / math.sqrt(cfg.d_model)
+        params["head"] = {"w": (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32) * std).astype(param_dtype)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+def _qkv(params, specs: BlockSpecs, cfg: ModelConfig, x, rope_cs, compute_dtype):
+    a = specs.attn_d()
+    b, s, _ = x.shape
+    q = apply_linear(params["attn"]["wq"], x, a["wq"], compute_dtype).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = apply_linear(params["attn"]["wk"], x, a["wk"], compute_dtype).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = apply_linear(params["attn"]["wv"], x, a["wv"], compute_dtype).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = apply_rope(q, cos, sin, cfg.partial_rotary)
+        k = apply_rope(k, cos, sin, cfg.partial_rotary)
+    q = constrain(q, BATCH, None, "model", None)
+    k = constrain(k, BATCH, None, "model", None)
+    v = constrain(v, BATCH, None, "model", None)
+    return q, k, v
+
+
+def attn_full(params, specs, cfg: ModelConfig, x, rope_cs, compute_dtype,
+              *, return_kv=False):
+    """Self-attention over the whole sequence (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    o = flash_attention(q, k, v, qpos=pos, kpos=pos, causal=True, window=cfg.window,
+                        q_block=cfg.q_block, kv_block=cfg.kv_block)
+    o = constrain(o, BATCH, None, "model", None)
+    o = o.reshape(b, s, cfg.q_dim)
+    if specs.attn_d()["wo"].kind == "tt":
+        # SP boundary: heads→seq reshard so the TT segment stays token-sharded
+        o = constrain(o, BATCH, "model", None)
+    o = apply_linear(params["attn"]["wo"], o, specs.attn_d()["wo"], compute_dtype)
+    return (o, (k, v)) if return_kv else (o, None)
+
+
+def attn_decode(params, specs, cfg: ModelConfig, x, rope_cs, cache, pos,
+                compute_dtype):
+    """One-token decode against a (ring) KV cache.
+
+    cache: {"k": (B, W, Hkv, Dh), "v": ..., "pos": (W,) int32, -1 = empty}.
+    ``pos`` is the absolute position of the new token (scalar int32).
+    """
+    b, s, _ = x.shape  # s == 1
+    q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
+    w = cache["k"].shape[1]
+    slot = (pos % w).astype(jnp.int32)
+    k_new = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_new = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    pos_new = jax.lax.dynamic_update_slice(cache["pos"], pos[None].astype(jnp.int32), (slot,))
+    kmask = pos_new >= 0
+    qpos = pos[None].astype(jnp.int32)
+    o = attention_dense(q, k_new, v_new, qpos=qpos, kpos=pos_new, kmask=kmask,
+                        causal=True, window=cfg.window)
+    o = constrain(o, BATCH, None, "model", None)
+    o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
+                     specs.attn_d()["wo"], compute_dtype)
+    return o, {"k": k_new, "v": v_new, "pos": pos_new}
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+def apply_block(params, specs: BlockSpecs, cfg: ModelConfig, x, rope_cs,
+                compute_dtype, cache=None, pos=None):
+    h = apply_norm(params["ln1"], x, cfg)
+    if cache is None:
+        a, _ = attn_full(params, specs, cfg, h, rope_cs, compute_dtype)
+        new_cache = None
+    else:
+        a, new_cache = attn_decode(params, specs, cfg, h, rope_cs, cache, pos, compute_dtype)
+    x = x + a.astype(x.dtype)
+    x = constrain(x, BATCH, "model", None)
+    h = apply_norm(params["ln2"], x, cfg)
+    if specs.moe is not None:
+        m, aux = apply_moe(params["moe"], h, specs.moe, cfg, compute_dtype)
+    else:
+        m = apply_mlp(params["mlp"], h, specs.mlp_d(), cfg, compute_dtype)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + m.astype(x.dtype)
+    x = constrain(x, BATCH, "model", None)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill) and decode step
+# ---------------------------------------------------------------------------
+def _rope_tables(cfg: ModelConfig, positions, b, s):
+    if cfg.pos_type == "rope":
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)
+        return rope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.partial_rotary)
+    if cfg.pos_type == "mrope":
+        if positions is None:
+            p = jnp.arange(s, dtype=jnp.int32)
+            positions = jnp.broadcast_to(p, (3, b, s))
+        return rope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.partial_rotary,
+                           mrope_sections=cfg.mrope_sections)
+    return None
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
+            inputs_embeds=None):
+    """tokens: (B, S) int32 -> logits (B, S, V) f32, aux scalar."""
+    compute_dtype = dt(cfg.compute_dtype)
+    b, s = tokens.shape[:2]
+    x = inputs_embeds if inputs_embeds is not None else embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, "model", None)
+    rope_cs = _rope_tables(cfg, positions, b, s)
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg_params, (n, ttd_on) in zip(params["segments"], segment_plan(cfg)):
+        specs = make_block_specs(cfg, ttd_on)
+
+        def body(carry, layer_params, specs=specs):
+            y, _, aux = apply_block(layer_params, specs, cfg, carry, rope_cs, compute_dtype)
+            return y, aux
+
+        f = remat_wrap(body, remat)
+        x, auxs = jax.lax.scan(lambda c, p: f(c, p), x, seg_params)
+        aux_total = aux_total + auxs.sum()
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux_total
+
+
+def logits_from_hidden(params, cfg: ModelConfig, x, compute_dtype=None):
+    compute_dtype = compute_dtype or dt(cfg.compute_dtype)
+    table = params["embed"]["table"] if cfg.tie_embeddings else params["head"]["w"].T
+    return unembed(x, table, compute_dtype)
+
+
+def head_weight(params, cfg: ModelConfig):
+    """(D, V) unembedding weight (tied or separate)."""
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["head"]["w"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, cache_dtype=jnp.bfloat16):
+    """Stacked per-layer ring caches.  Ring size = window if SWA else max_len."""
+    w = min(cfg.window, max_len) if cfg.window else max_len
+    def one(n):
+        return {
+            "k": jnp.zeros((n, batch, w, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+            "v": jnp.zeros((n, batch, w, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+            "pos": jnp.full((n, w), -1, jnp.int32),
+        }
+    return [one(n) for n, _ in segment_plan(cfg)]
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos, positions=None):
+    """tokens: (B, 1); pos: scalar int32 absolute position.
+    Returns logits (B, V) f32 and updated caches."""
+    compute_dtype = dt(cfg.compute_dtype)
+    b = tokens.shape[0]
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, None, None)
+    if positions is None:
+        rope_pos = jnp.broadcast_to(pos[None], (1,)).astype(jnp.int32)
+    else:
+        rope_pos = positions
+    rope_cs = _rope_tables(cfg, rope_pos if cfg.pos_type != "mrope" else positions, b, 1)
+    new_caches = []
+    for seg_params, seg_cache, (n, ttd_on) in zip(params["segments"], caches, segment_plan(cfg)):
+        specs = make_block_specs(cfg, ttd_on)
+
+        def body(carry, xs, specs=specs):
+            layer_params, layer_cache = xs
+            y, new_cache, _ = apply_block(layer_params, specs, cfg, carry, rope_cs,
+                                          compute_dtype, cache=layer_cache, pos=pos)
+            return y, new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_cache)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bfloat16,
+            max_len: int | None = None):
+    """Full-sequence prefill; returns (last-token logits, caches filled to S)."""
+    compute_dtype = dt(cfg.compute_dtype)
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, "model", None)
+    rope_cs = _rope_tables(cfg, positions, b, s)
+    caches = []
+    for seg_params, (n, ttd_on) in zip(params["segments"], segment_plan(cfg)):
+        specs = make_block_specs(cfg, ttd_on)
+
+        def body(carry, layer_params, specs=specs):
+            h = apply_norm(layer_params["ln1"], carry, cfg)
+            a, kv = attn_full(layer_params, specs, cfg, h, rope_cs, compute_dtype,
+                              return_kv=True)
+            y = carry + a.astype(carry.dtype)
+            h2 = apply_norm(layer_params["ln2"], y, cfg)
+            if specs.moe is not None:
+                m, _ = apply_moe(layer_params["moe"], h2, specs.moe, cfg, compute_dtype)
+            else:
+                m = apply_mlp(layer_params["mlp"], h2, specs.mlp_d(), cfg, compute_dtype)
+            y = y + m.astype(y.dtype)
+            y = constrain(y, BATCH, "model", None)
+            k, v = kv
+            w = min(cfg.window, max_len) if cfg.window else max_len
+            k_c, v_c, pos_c = _ring_from_prefill(k, v, s, w, cache_dtype)
+            return y, {"k": k_c, "v": v_c, "pos": pos_c}
+
+        x, cache = jax.lax.scan(body, x, seg_params)
+        caches.append(cache)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, cfg, x[:, -1:])[:, 0]
+    return logits, caches
+
+
+def _ring_from_prefill(k, v, s, w, cache_dtype):
+    """Pack the last ``w`` prefilled KVs into ring layout (slot = pos % w)."""
+    b, _, hkv, dh = k.shape
+    if s <= w:
+        pad = w - s
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        pos_c = jnp.concatenate([jnp.arange(s, dtype=jnp.int32),
+                                 jnp.full((pad,), -1, jnp.int32)])
+        return k_c, v_c, pos_c
+    # keep positions [s-w, s): position p lives at slot p % w
+    tail_pos = jnp.arange(s - w, s, dtype=jnp.int32)  # positions kept
+    slots = tail_pos % w
+    k_tail = k[:, -w:].astype(cache_dtype)
+    v_tail = v[:, -w:].astype(cache_dtype)
+    k_c = jnp.zeros((b, w, hkv, dh), cache_dtype).at[:, slots].set(k_tail)
+    v_c = jnp.zeros((b, w, hkv, dh), cache_dtype).at[:, slots].set(v_tail)
+    pos_c = jnp.zeros((w,), jnp.int32).at[slots].set(tail_pos)
+    return k_c, v_c, pos_c
+
+
+# ---------------------------------------------------------------------------
+# Specs tree (mirrors init_lm params structure; used by core.compress)
+# ---------------------------------------------------------------------------
+def specs_tree(cfg: ModelConfig):
+    segs = []
+    for n, ttd_on in segment_plan(cfg):
+        sp = make_block_specs(cfg, ttd_on)
+        seg = {"ln1": None, "ln2": None, "attn": {nm: s for nm, s in sp.attn}}
+        if sp.moe is not None:
+            seg["moe"] = {"router": sp.moe["router"],
+                          "experts": dict(sp.moe["expert"])}
+        else:
+            seg["mlp"] = sp.mlp_d()
+        segs.append(seg)
+    tree = {"embed": None, "segments": segs, "final_norm": None}
+    if not cfg.tie_embeddings:
+        tree["head"] = None
+    return tree

@@ -1,0 +1,7 @@
+from .optimizers import (  # noqa: F401
+    OptState,
+    init_optimizer,
+    apply_optimizer,
+    opt_state_pspecs,
+)
+from .schedules import warmup_cosine  # noqa: F401

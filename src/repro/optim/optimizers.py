@@ -1,0 +1,157 @@
+"""Optimizers in pure JAX: AdamW and Adafactor.
+
+Adafactor (factored second moments, Shazeer & Stern 2018) is the default for
+the trillion-parameter configs: AdamW's 8 bytes/param of state exceeds
+512×16 GB for kimi-k2-1t, Adafactor's factored statistics are ~0.01
+bytes/param for matrices.  Optimizer state inherits the parameter sharding
+(ZeRO: state lives on the shard that owns the parameter slice).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+EPS1 = 1e-30
+EPS2 = 1e-3
+
+
+@dataclass(frozen=True)
+class OptState:
+    kind: str  # adamw | adafactor
+    inner: Any  # pytree of per-param states
+    step: jax.Array
+
+
+def _is_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_optimizer(kind: str, params) -> OptState:
+    if kind == "adamw":
+        inner = {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+    elif kind == "adafactor":
+        def leaf(p):
+            if _is_factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        inner = jax.tree.map(leaf, params)
+    else:
+        raise ValueError(kind)
+    return OptState(kind=kind, inner=inner, step=jnp.zeros((), jnp.int32))
+
+
+def opt_state_pspecs(kind: str, param_specs, params_shapes) -> Any:
+    """Derive optimizer-state PartitionSpecs from parameter specs."""
+    if kind == "adamw":
+        return OptState(kind=kind,
+                        inner={"mu": param_specs, "nu": param_specs},
+                        step=P())
+
+    def leaf(spec, p):
+        if _is_factored(p.shape):
+            return {"vr": P(*spec[:-1]), "vc": P(*(tuple(spec[:-2]) + (spec[-1],)))}
+        return {"v": spec}
+
+    inner = jax.tree.map(leaf, param_specs, params_shapes,
+                         is_leaf=lambda x: isinstance(x, P))
+    return OptState(kind=kind, inner=inner, step=P())
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_optimizer(
+    state: OptState,
+    params,
+    grads,
+    lr: jax.Array,
+    *,
+    weight_decay: float = 0.0,
+    grad_clip: float = 0.0,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[Any, OptState, dict]:
+    gnorm = _global_norm(grads)
+    if grad_clip > 0:
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+
+    if state.kind == "adamw":
+        bc1 = 1 - b1 ** sf
+        bc2 = 1 - b2 ** sf
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, params, grads, state.inner["mu"], state.inner["nu"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = OptState("adamw", {"mu": new_mu, "nu": new_nu}, step)
+        return new_params, new_state, {"grad_norm": gnorm}
+
+    # --- adafactor ---
+    decay = 1.0 - sf ** -0.8  # \hat{beta}_2t
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32)
+        g2 = g * g + EPS1
+        if "vr" in st:
+            vr = decay * st["vr"] + (1 - decay) * g2.mean(-1)
+            vc = decay * st["vc"] + (1 - decay) * g2.mean(-2)
+            denom = jnp.maximum(vr.mean(-1, keepdims=True), EPS1)
+            v_hat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            u = g * jax.lax.rsqrt(v_hat + EPS1)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = decay * st["v"] + (1 - decay) * g2
+            u = g * jax.lax.rsqrt(v + EPS1)
+            new_st = {"v": v}
+        # RMS-clip the update (Adafactor d=1)
+        rms = jnp.sqrt(jnp.mean(u * u) + EPS1)
+        u = u / jnp.maximum(1.0, rms)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    new_p, new_s = [], []
+    for p, g, st in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = upd(p, g, st)
+        new_p.append(np_)
+        new_s.append(ns_)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = OptState("adafactor", jax.tree.unflatten(treedef, new_s), step)
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.inner, s.step), s.kind),
+    lambda kind, children: OptState(kind, children[0], children[1]),
+)

@@ -1,0 +1,1 @@
+from .steps import cache_pspecs, serve_config_of  # noqa: F401

@@ -1,0 +1,177 @@
+"""Continuous-batching serving engine.
+
+A Python scheduler drives two jitted programs (prefill_step, decode_step)
+over a fixed decode batch of ``slots``.  Requests join free slots after
+prefill; every decode tick advances all active slots one token; finished
+sequences (eos or max_tokens) free their slot immediately — classic
+continuous batching (vLLM-style at the scheduling level; the KV layout here
+is per-slot rings rather than paged blocks).
+
+Single-sequence prefill + slot-wise cache surgery keeps the engine simple
+and correct; a production deployment would batch prefills and use the
+sharded decode_step from launch/dryrun.py (same model functions).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig
+from ..models.api import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_tokens: int
+    eos: int | None = None
+    out_tokens: list[int] = field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
+                 cache_dtype=jnp.float32, greedy: bool = True):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = model.init_cache(slots, max_len, cache_dtype)
+        # identify each cache leaf's batch axis structurally (dim sizes like
+        # n_layers can collide with the slot count)
+        import jax as _jax
+        sa = _jax.eval_shape(lambda: model.init_cache(slots, max_len, cache_dtype))
+        sb = _jax.eval_shape(lambda: model.init_cache(slots + 1, max_len, cache_dtype))
+        self._batch_axis = _jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                               if x != y), -1), sa, sb)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_dtype=cache_dtype,
+                                       max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, b, pos: model.decode_step(p, c, b, pos))
+        self._next_rid = 0
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, prompt: list[int], max_tokens: int = 32, eos: int | None = None) -> Request:
+        req = Request(self._next_rid, list(prompt), max_tokens, eos, t_submit=time.time())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and ticks < max_ticks:
+            self._admit()
+            self._decode_tick()
+            ticks += 1
+        return self.finished
+
+    # -- internals ------------------------------------------------------------
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray([req.prompt], jnp.int32)
+                logits, cache1 = self._prefill(self.params, {"tokens": toks})
+                tok = self._sample(logits[0])
+                req.out_tokens.append(tok)
+                req.t_first = time.time()
+                self._install(s, cache1, len(req.prompt))
+                self.slot_req[s] = req
+                self.slot_pos[s] = len(req.prompt)
+
+    def _install(self, slot: int, cache1, prompt_len: int):
+        """Copy a batch-1 prefill cache into batch slot ``slot``.
+
+        Leaves with a batch dim get slot-surgery (ring dims padded/cropped to
+        the engine's max_len); batchless int32 leaves (position rings, shared
+        across the batch) merge by elementwise max — valid because decode
+        attention masks ``kpos <= qpos`` per query, so a slot lagging behind
+        the shared ring frontier never sees future entries.
+        """
+        def _fit(one, fshape, axis):
+            """Pad/crop every dim after ``axis`` to match fshape."""
+            pads, slices = [], []
+            for d in range(one.ndim):
+                target = fshape[d]
+                diff = target - one.shape[d]
+                pads.append((0, max(diff, 0)))
+                slices.append(slice(0, target))
+            fill = -1 if one.dtype == jnp.int32 else 0
+            return jnp.pad(one, pads, constant_values=fill)[tuple(slices)]
+
+        def upd(full, one, axis):
+            fshape = full.shape
+            if axis >= 0:
+                idx = [slice(None)] * len(fshape)
+                idx[axis] = slice(slot, slot + 1)
+                tgt = list(fshape)
+                tgt[axis] = 1
+                return full.at[tuple(idx)].set(_fit(one, tgt, axis))
+            if full.dtype == jnp.int32:  # shared position rings
+                return jnp.maximum(full, _fit(one, full.shape, 0))
+            return full
+
+        self.cache = jax.tree.map(upd, self.cache, cache1, self._batch_axis)
+
+    def _decode_tick(self):
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return
+        # all active slots share a tick; position is per-slot via pos rings,
+        # we step each active slot one token (batched decode over all slots)
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = self.slot_req[s].out_tokens[-1]
+        # engine-level simplification: one decode_step per distinct position
+        # group (slots admitted together share positions)
+        groups: dict[int, list[int]] = {}
+        for s in active:
+            groups.setdefault(int(self.slot_pos[s]), []).append(s)
+        for pos, slots in groups.items():
+            logits, new_cache = self._decode(self.params, self.cache,
+                                             {"tokens": jnp.asarray(toks)},
+                                             jnp.int32(pos))
+            # keep updates only for slots in this group
+            mask = np.zeros(self.slots, bool)
+            mask[slots] = True
+
+            def sel(new, old, axis):
+                if axis >= 0:
+                    m = jnp.asarray(mask).reshape(
+                        (1,) * axis + (self.slots,) + (1,) * (new.ndim - axis - 1))
+                    return jnp.where(m, new, old)
+                return new  # shared leaves (pos rings) — same for the group
+
+            self.cache = jax.tree.map(sel, new_cache, self.cache, self._batch_axis)
+            for s in slots:
+                req = self.slot_req[s]
+                tok = self._sample(logits[s])
+                req.out_tokens.append(tok)
+                self.slot_pos[s] += 1
+                if (req.eos is not None and tok == req.eos) or \
+                        len(req.out_tokens) >= req.max_tokens or \
+                        self.slot_pos[s] >= self.max_len - 1:
+                    req.done = True
+                    req.t_done = time.time()
+                    self.finished.append(req)
+                    self.slot_req[s] = None
+
+    def _sample(self, logits) -> int:
+        return int(jnp.argmax(logits))

@@ -1,0 +1,85 @@
+"""Serving-side sharding rules and config transforms.
+
+Serving parameterization (the paper's deployment path): TTD stays on, all
+non-TT linears go INT4 (w4a16), params are TP-sharded over ``model`` only
+(no FSDP — decode latency wants weights resident).  KV caches shard batch
+over ``data`` and kv-heads / state width over ``model``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..config import ModelConfig, QuantConfig
+
+
+def serve_config_of(cfg: ModelConfig) -> ModelConfig:
+    """Training config -> serving config (int4 weights for non-TT linears)."""
+    return cfg.replace(quant=QuantConfig(enabled=True, bits=4, group_size=128),
+                       param_dtype="bfloat16")
+
+
+def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):
+    names = []
+    for p in path:
+        names.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    leaf = names[-1]
+    nd = len(shape)
+    intent = [None] * nd
+    if leaf in ("k", "v"):
+        # (..., B, W, Hkv, Dh); GQA often has Hkv < |model| — fall back to
+        # sharding the head_dim so big caches still spread over TP
+        if nd >= 4:
+            intent[-4] = batch_axes
+            n_model = mesh.shape.get("model", 1)
+            if shape[-2] % n_model == 0:
+                intent[-2] = "model"
+            elif shape[-1] % n_model == 0:
+                intent[-1] = "model"
+    elif leaf == "wkv":  # (..., B, H, dk, dv)
+        if nd >= 4:
+            intent[-4] = batch_axes
+            intent[-3] = "model"
+    elif leaf == "h":  # (..., B, W)
+        intent[-2] = batch_axes
+        intent[-1] = "model"
+    elif leaf == "conv":  # (..., B, cw-1, W)
+        if nd >= 3:
+            intent[-3] = batch_axes
+            intent[-1] = "model"
+    elif leaf in ("x_tm", "x_cm"):  # (..., B, 1, D)
+        if nd >= 3:
+            intent[-3] = batch_axes
+    # sanitize
+    out = []
+    for dim, e in enumerate(intent):
+        if e is None:
+            out.append(None)
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if not axes or shape[dim] % total != 0:
+            out.append(None)
+        else:
+            out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def cache_pspecs(cache_shapes, mesh: Mesh):
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    baxes = baxes if len(baxes) > 1 else baxes[0]
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_rule(path, tuple(leaf.shape), mesh, baxes),
+        cache_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_pspecs(cache_shapes, mesh),
+                        is_leaf=lambda x: isinstance(x, P))

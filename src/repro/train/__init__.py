@@ -1,0 +1,2 @@
+from .losses import chunked_cross_entropy  # noqa: F401
+from .step import TrainState, build_train_step, init_train_state  # noqa: F401

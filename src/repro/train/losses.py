@@ -1,0 +1,56 @@
+"""Losses.  The cross-entropy is chunked over the sequence so full
+(B, S, V) logits are never materialized — at vocab 163840 × 1M tokens the
+full tensor would be ~0.7 TB f32; chunking keeps the live slice at
+(B, chunk, V_shard) per device."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import constrain
+from ..dist.api import BATCH
+
+
+def _ce_chunk(hidden, head_w, targets, mask, z_coef):
+    logits = jax.lax.dot_general(
+        hidden.astype(jnp.bfloat16), head_w.astype(jnp.bfloat16),
+        (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    logits = constrain(logits, BATCH, None, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    z = jnp.square(lse) * mask
+    return ce.sum(), z.sum() * z_coef
+
+
+def chunked_cross_entropy(hidden, head_w, targets, mask, *, chunk: int = 512,
+                          z_coef: float = 0.0):
+    """hidden (B,S,D), head_w (D,V), targets (B,S) int32, mask (B,S).
+    Returns (mean_ce + z_loss, metrics)."""
+    b, s, d = hidden.shape
+    mask = mask.astype(jnp.float32)
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fall back for odd smoke shapes
+    nc = s // chunk
+
+    if nc == 1:
+        ce_sum, z_sum = _ce_chunk(hidden, head_w, targets, mask, z_coef)
+    else:
+        hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+        ts = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+        ms = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+        # checkpoint: logits are recomputed in backward rather than stacked
+        # across chunks (which would materialize the full (B,S,V) tensor)
+        @jax.checkpoint
+        def body(carry, xs):
+            h, t, m = xs
+            ce, z = _ce_chunk(h, head_w, t, m, z_coef)
+            return (carry[0] + ce, carry[1] + z), None
+
+        (ce_sum, z_sum), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ts, ms))
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = ce_sum / denom + z_sum / denom
+    return loss, {"ce": ce_sum / denom, "tokens": denom}

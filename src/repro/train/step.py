@@ -1,0 +1,116 @@
+"""Jitted training step builder: loss -> grads (with microbatch accumulation)
+-> clip -> optimizer, all under GSPMD sharding."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..config import ModelConfig, TrainConfig
+from ..dist.api import batch_axes
+from ..dist.sharding import param_pspecs
+from ..models.api import Model
+from ..optim import apply_optimizer, init_optimizer, opt_state_pspecs, warmup_cosine
+from .losses import chunked_cross_entropy
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+def batch_pspec(mesh, extra_dims: int = 1):
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return P(baxes, *([None] * extra_dims))
+
+
+def loss_fn(model: Model, params, batch, train_cfg: TrainConfig):
+    hidden, aux = model.forward(params, batch, remat=train_cfg.remat)
+    head = model.head_weight(params)
+    loss, metrics = chunked_cross_entropy(hidden, head, batch["targets"],
+                                          batch["loss_mask"])
+    return loss + aux, {**metrics, "aux": aux}
+
+
+def _grads_one(model, params, batch, train_cfg):
+    (loss, metrics), grads = jax.value_and_grad(
+        partial(loss_fn, model), has_aux=True)(params, batch, train_cfg)
+    return loss, metrics, grads
+
+
+def build_train_step(model: Model, train_cfg: TrainConfig):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (to be jitted
+    by the caller with explicit shardings)."""
+    schedule = warmup_cosine(train_cfg.lr, train_cfg.warmup_steps, train_cfg.total_steps)
+
+    def train_step(state: TrainState, batch):
+        mb = train_cfg.microbatches
+        if mb <= 1:
+            loss, metrics, grads = _grads_one(model, state.params, batch, train_cfg)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+
+            def body(carry, mb_batch):
+                loss, metrics, grads = _grads_one(model, state.params, mb_batch, train_cfg)
+                acc_loss, acc_grads = carry
+                acc_grads = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                         acc_grads, grads)
+                return (acc_loss + loss, acc_grads), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), ms = jax.lax.scan(body, (jnp.zeros(()), zero), mbatches)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+
+        lr = schedule(state.step)
+        new_params, new_opt, opt_metrics = apply_optimizer(
+            state.opt, state.params, grads, lr,
+            weight_decay=train_cfg.weight_decay, grad_clip=train_cfg.grad_clip)
+        metrics = {**metrics, **opt_metrics, "loss": loss, "lr": lr}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def state_pspecs(model: Model, train_cfg: TrainConfig, mesh, fsdp: bool = True):
+    """PartitionSpec tree for TrainState (params + optimizer state + step)."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_pspecs(shapes, mesh, fsdp)
+    opt_specs = opt_state_pspecs(train_cfg.optimizer, pspecs, shapes)
+    return TrainState(params=pspecs, opt=opt_specs, step=P())
+
+
+def init_train_state(model: Model, train_cfg: TrainConfig, key, mesh=None,
+                     fsdp: bool = True) -> TrainState:
+    """Initialize (optionally sharded) training state."""
+    def make():
+        params = model.init(key)
+        opt = init_optimizer(train_cfg.optimizer, params)
+        return TrainState(params, opt, jnp.zeros((), jnp.int32))
+
+    if mesh is None:
+        return make()
+    specs = state_pspecs(model, train_cfg, mesh, fsdp)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    with jax.set_mesh(mesh):
+        return jax.jit(make, out_shardings=shardings)()

@@ -1,0 +1,22 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 32)),
+        "b": jnp.arange(8.0)}
+mesh_a = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh_b = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+sh_a = {"w": NamedSharding(mesh_a, P("data", None)), "b": NamedSharding(mesh_a, P())}
+tree_a = jax.device_put(tree, sh_a)
+with tempfile.TemporaryDirectory() as td:
+    save_checkpoint(td, 3, tree_a)
+    # restore onto a *different* mesh/sharding (elastic scale change)
+    sh_b = {"w": NamedSharding(mesh_b, P("model", "data")), "b": NamedSharding(mesh_b, P())}
+    restored, _ = restore_checkpoint(td, 3, tree, shardings=sh_b)
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh_b["w"]
+print("OK")

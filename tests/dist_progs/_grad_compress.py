@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.dist.compression import compressed_pmean
+
+mesh = jax.make_mesh((8,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+g = jax.random.normal(jax.random.PRNGKey(0), (8, 64, 32))
+
+def island(g_local, key):
+    tree = {"w": g_local[0]}
+    out = compressed_pmean(tree, "pod", key)
+    return out["w"]
+
+out = jax.jit(jax.shard_map(island, mesh=mesh, in_specs=(P("pod"), P()),
+                            out_specs=P(), check_vma=False))(g, jax.random.PRNGKey(1))
+ref = g.mean(0)
+err = float(jnp.max(jnp.abs(out - ref)))
+scale = float(jnp.max(jnp.abs(ref)))
+# int8 stochastic rounding: error bounded by ~scale_amax/127
+amax = float(jnp.max(jnp.abs(g)))
+assert err <= amax / 127 * 1.5, (err, amax / 127)
+# unbiasedness: repeat with many keys, mean error -> 0
+errs = []
+for i in range(20):
+    o = jax.jit(jax.shard_map(island, mesh=mesh, in_specs=(P("pod"), P()),
+                              out_specs=P(), check_vma=False))(g, jax.random.PRNGKey(i))
+    errs.append(np.asarray(o - ref))
+bias = np.abs(np.mean(errs, axis=0)).max()
+assert bias < amax / 127 * 0.5, bias
+print("OK")

@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.models import get_model
+from repro.train.step import batch_pspec, build_train_step, init_train_state, state_pspecs
+
+cfg = get_config("tinyllama-1.1b", reduced=True).replace(
+    compute_dtype="float32", param_dtype="float32")
+model = get_model(cfg)
+tc = TrainConfig(global_batch=8, seq_len=32, lr=1e-3, optimizer="adamw", remat="none")
+step = build_train_step(model, tc)
+
+key = jax.random.PRNGKey(0)
+toks = jax.random.randint(key, (8, 32), 0, cfg.vocab_size)
+batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1),
+         "loss_mask": jnp.ones((8, 32), jnp.float32)}
+
+# single device
+s0 = init_train_state(model, tc, key)
+s1, m1 = jax.jit(step)(s0, batch)
+
+# sharded 2x4 mesh
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with jax.set_mesh(mesh):
+    specs = state_pspecs(model, tc, mesh)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    s0s = init_train_state(model, tc, key, mesh=mesh)
+    bsh = jax.tree.map(lambda x: NamedSharding(mesh, batch_pspec(mesh, x.ndim - 1)), batch)
+    batch_s = jax.device_put(batch, bsh)
+    s1s, m1s = jax.jit(step, in_shardings=(sh, bsh), out_shardings=(sh, None))(s0s, batch_s)
+
+l1, l2 = float(m1["loss"]), float(m1s["loss"])
+assert abs(l1 - l2) < 5e-3, (l1, l2)
+d = max(float(jnp.max(jnp.abs(a - jax.device_get(b)))) for a, b in
+        zip(jax.tree.leaves(s1.params), jax.tree.leaves(s1s.params)))
+assert d < 5e-3, d
+print("OK")

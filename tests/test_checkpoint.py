@@ -1,0 +1,57 @@
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(key):
+    return {"a": jax.random.normal(key, (8, 4)),
+            "nested": {"b": jnp.arange(6, dtype=jnp.int32),
+                       "cores": [jnp.ones((2, 3)), jnp.zeros((3,))]}}
+
+
+def test_roundtrip(tmp_path, key):
+    t = _tree(key)
+    save_checkpoint(tmp_path, 7, t, extra={"foo": 1})
+    assert latest_step(tmp_path) == 7
+    restored, extra = restore_checkpoint(tmp_path, 7, t)
+    assert extra == {"foo": 1}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_checkpoint_invisible(tmp_path, key):
+    t = _tree(key)
+    save_checkpoint(tmp_path, 1, t)
+    # fake a torn write: directory without COMMIT
+    (tmp_path / "step_00000002").mkdir()
+    assert latest_step(tmp_path) == 1
+
+
+def test_gc_keeps_last(tmp_path, key):
+    t = _tree(key)
+    for s in range(5):
+        save_checkpoint(tmp_path, s, t, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1] == "step_00000004"
+
+
+def test_async_checkpointer(tmp_path, key):
+    t = _tree(key)
+    ck = AsyncCheckpointer(tmp_path, every=2)
+    assert not ck.maybe_save(1, t)
+    assert ck.maybe_save(2, t)
+    ck.wait()
+    assert latest_step(tmp_path) == 2
+
+
+def test_missing_leaf_raises(tmp_path, key):
+    t = _tree(key)
+    save_checkpoint(tmp_path, 0, {"a": t["a"]})
+    with pytest.raises(KeyError):
+        restore_checkpoint(tmp_path, 0, t)

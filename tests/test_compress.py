@@ -1,0 +1,85 @@
+"""Whole-model compression pipeline: Table I reproduction + exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig, TTDConfig
+from repro.configs import get_config
+from repro.core.compress import compress_model, compression_report
+from repro.models import get_model
+
+
+def test_table1_chatglm3():
+    rep = compression_report(get_config("chatglm3-6b"))
+    assert abs(rep.block_cr - 10.72) < 0.01
+    assert abs(rep.network_cr - 1.94) < 0.005
+    crs = {r.role: r.cr for r in rep.roles}
+    assert abs(crs["wo"] - 481.88) < 0.01
+    assert abs(crs["gate"] - 1446.44) < 0.01
+
+
+def test_table1_llama2():
+    rep = compression_report(get_config("llama2-7b"))
+    assert abs(rep.block_cr - 4.01) < 0.005
+    # paper's stated 1.60 corresponds to ~16 TT blocks; the formula with the
+    # stated 19 blocks gives 1.80 (documented inconsistency, EXPERIMENTS.md)
+    assert abs(rep.network_cr - 1.80) < 0.01
+    crs = {r.role: r.cr for r in rep.roles}
+    assert abs(crs["wo"] - 481.88) < 0.01
+    assert abs(crs["gate"] - 1007.89) < 0.01
+
+
+def test_every_arch_has_positive_block_cr():
+    for arch in ("tinyllama-1.1b", "qwen1.5-110b", "mixtral-8x22b", "kimi-k2-1t-a32b"):
+        rep = compression_report(get_config(arch))
+        assert rep.block_cr > 1.5, (arch, rep.block_cr)
+
+
+def test_compress_model_full_rank_exact(key):
+    cfg_t = get_config("llama2-7b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32",
+        ttd=TTDConfig(enabled=True, rank=10**6, d=2))
+    cfg_d = cfg_t.replace(ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
+    m_d, m_t = get_model(cfg_d), get_model(cfg_t)
+    params_d = m_d.init(key)
+    params_t = compress_model(params_d, cfg_d, cfg_t, svd_method="svd")
+    toks = jax.random.randint(key, (2, 16), 0, cfg_t.vocab_size)
+    h_d, _ = m_d.forward(params_d, {"tokens": toks})
+    h_t, _ = m_t.forward(params_t, {"tokens": toks})
+    assert float(jnp.linalg.norm(h_d - h_t) / jnp.linalg.norm(h_d)) < 1e-4
+
+
+def test_compress_model_segment_resplit(key):
+    """Paper recipe: only the last k blocks TT'd; dense stack re-splits."""
+    base = get_config("llama2-7b", reduced=True).replace(
+        n_layers=4, compute_dtype="float32", param_dtype="float32")
+    cfg_t = base.replace(ttd=TTDConfig(enabled=True, rank=10**6, d=2, first_tt_block=2))
+    cfg_d = base.replace(ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
+    m_d, m_t = get_model(cfg_d), get_model(cfg_t)
+    params_d = m_d.init(key)
+    params_t = compress_model(params_d, cfg_d, cfg_t, svd_method="svd")
+    assert len(params_t["segments"]) == 2
+    toks = jax.random.randint(key, (2, 8), 0, base.vocab_size)
+    h_d, _ = m_d.forward(params_d, {"tokens": toks})
+    h_t, _ = m_t.forward(params_t, {"tokens": toks})
+    assert float(jnp.linalg.norm(h_d - h_t) / jnp.linalg.norm(h_d)) < 1e-4
+
+
+def test_compress_int4_only(key):
+    cfg_d = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32",
+        ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
+    cfg_q = cfg_d.replace(quant=QuantConfig(enabled=True, group_size=32))
+    m_d, m_q = get_model(cfg_d), get_model(cfg_q)
+    params_d = m_d.init(key)
+    params_q = compress_model(params_d, cfg_d, cfg_q)
+    toks = jax.random.randint(key, (2, 16), 0, cfg_d.vocab_size)
+    h_d, _ = m_d.forward(params_d, {"tokens": toks})
+    h_q, _ = m_q.forward(params_q, {"tokens": toks})
+    # int4 noise compounds through a random-init residual stack; require the
+    # representation to stay directionally faithful (per-layer error bounds
+    # are covered exactly in test_quant.py)
+    cos = float(jnp.sum(h_d * h_q) /
+                (jnp.linalg.norm(h_d) * jnp.linalg.norm(h_q)))
+    assert cos > 0.9, cos

@@ -1,0 +1,58 @@
+"""Full-size configs: dims match the assignment; param counts sane."""
+import math
+
+import jax
+import pytest
+
+from repro.config import QuantConfig, TTDConfig
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config
+from repro.models import get_model
+
+EXPECTED_PARAMS_B = {  # dense (uncompressed) totals, ±12%
+    "tinyllama-1.1b": 1.1,
+    "phi4-mini-3.8b": 3.84,
+    "llama2-7b": 6.74,
+    "chatglm3-6b": 6.24,
+    "granite-3-8b": 8.4,
+    "qwen2-vl-7b": 7.6,
+    "rwkv6-7b": 7.5,
+    "recurrentgemma-2b": 2.9,
+    "qwen1.5-110b": 111.0,
+    "mixtral-8x22b": 140.0,
+    "kimi-k2-1t-a32b": 1041.0,
+    "whisper-base": 0.08,
+}
+
+
+def _dense(cfg):
+    return cfg.replace(ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_param_counts(arch):
+    cfg = _dense(get_config(arch))
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    expect = EXPECTED_PARAMS_B[arch] * 1e9
+    assert abs(n - expect) / expect < 0.12, f"{arch}: {n/1e9:.2f}B vs {expect/1e9:.2f}B"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_ttd_enabled_by_default(arch):
+    cfg = get_config(arch)
+    assert cfg.ttd.enabled  # the paper's technique is first-class everywhere
+
+
+def test_assigned_arch_list():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert "chatglm3-6b" in ALL_ARCHS and "llama2-7b" in ALL_ARCHS
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_configs_are_small(arch):
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
+    assert n < 2_000_000, f"{arch} reduced too big: {n}"

@@ -1,0 +1,40 @@
+"""Multi-device tests: each runs in a subprocess with 8 fake CPU devices so
+the main pytest process keeps its single-device jax (per the dry-run rule:
+device-count flags are never set globally)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+PROGS = Path(__file__).parent / "dist_progs"
+SRC = str(Path(__file__).parent.parent / "src")
+
+
+def _run(name):
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
+           "HOME": "/root", "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run([sys.executable, str(PROGS / name)], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"{name} failed:\n{r.stdout}\n{r.stderr}"
+    assert "OK" in r.stdout
+
+
+def test_moe_expert_parallel_all_to_all():
+    _run("_moe_ep.py")
+
+
+def test_pipeline_parallel_gpipe():
+    _run("_pipeline.py")
+
+
+def test_gradient_compression_int8_allreduce():
+    _run("_grad_compress.py")
+
+
+def test_sharded_train_step_parity():
+    _run("_sharded_train_parity.py")
+
+
+def test_elastic_checkpoint_reshard():
+    _run("_elastic_reshard.py")

@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TTSpec, init_tt_linear, quantize_int4
+from repro.kernels import ref
+from repro.kernels.int4_matmul import int4_matmul_pallas
+from repro.kernels.tt_linear import pick_block_b, tt_linear_pallas
+
+
+@pytest.mark.parametrize("n,m,r,d,b,dtype", [
+    (256, 512, 8, 4, 7, jnp.float32),
+    (4096, 4096, 16, 4, 32, jnp.float32),   # paper LinearO
+    (512, 256, 4, 3, 64, jnp.bfloat16),
+    (64, 64, 2, 2, 1, jnp.float32),
+    (2048, 5632, 8, 4, 13, jnp.bfloat16),   # tinyllama MLP shape
+])
+def test_tt_kernel_matches_ref(n, m, r, d, b, dtype, key):
+    spec = TTSpec.make(n, m, r, d=d)
+    cores = [c.astype(dtype) for c in init_tt_linear(key, spec, jnp.float32)["cores"]]
+    x = jax.random.normal(key, (b, n), jnp.float32).astype(dtype)
+    y_k = tt_linear_pallas(x, cores, spec, interpret=True).astype(jnp.float32)
+    y_r = ref.tt_linear_staged(x, cores, spec).astype(jnp.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    scale = float(jnp.max(jnp.abs(y_r))) or 1.0
+    assert float(jnp.max(jnp.abs(y_k - y_r))) / scale < tol
+
+
+def test_tt_kernel_paper_factorization(key):
+    spec = TTSpec.make(4096, 13696, 16, in_modes=(8, 8, 8, 8), out_modes=(4, 4, 8, 107))
+    cores = init_tt_linear(key, spec, jnp.float32)["cores"]
+    x = jax.random.normal(key, (16, 4096))
+    y_k = tt_linear_pallas(x, cores, spec, interpret=True)
+    y_r = ref.tt_linear_staged(x, cores, spec)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-4, atol=1e-4)
+
+
+def test_tt_kernel_fused_bn_res_epilogue(key):
+    """The paper's TTDLinear-BN-Res operator fusion (§III.A)."""
+    spec = TTSpec.make(256, 512, 8, d=4)
+    cores = init_tt_linear(key, spec, jnp.float32)["cores"]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (10, 256))
+    sc = jax.random.normal(k2, (512,))
+    bi = jax.random.normal(k3, (512,))
+    res = jax.random.normal(k4, (10, 512))
+    y_k = tt_linear_pallas(x, cores, spec, scale=sc, bias=bi, residual=res, interpret=True)
+    y_r = ref.tt_linear_bn_res(x, cores, spec, scale=sc, bias=bi, residual=res)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-5)
+
+
+def test_tt_kernel_block_picker():
+    spec = TTSpec.make(4096, 13696, 16, in_modes=(8, 8, 8, 8), out_modes=(4, 4, 8, 107))
+    bb = pick_block_b(spec, 1024)
+    assert bb >= 1 and (bb & (bb - 1)) == 0  # power of two
+    per_token = (spec.n_in + spec.n_out + 2 * spec.max_intermediate()) * 4
+    assert bb * per_token <= 12 * 2**20  # VMEM budget honored
+
+
+@pytest.mark.parametrize("b,k,m,g,dtype", [
+    (8, 256, 128, 64, jnp.float32),
+    (130, 4096, 300, 128, jnp.bfloat16),
+    (1, 512, 512, 128, jnp.float32),
+    (33, 1024, 96, 256, jnp.bfloat16),
+])
+def test_int4_kernel_matches_ref(b, k, m, g, dtype, key):
+    w = np.random.randn(m, k).astype(np.float32)
+    q = quantize_int4(w, g)
+    x = jax.random.normal(key, (b, k), jnp.float32).astype(dtype)
+    y_k = int4_matmul_pallas(x, q["qweight"], q["scales"], group=g, interpret=True)
+    y_r = ref.int4_matmul(x, q["qweight"], q["scales"], group=g)
+    scale = float(jnp.max(jnp.abs(y_r.astype(jnp.float32)))) or 1.0
+    err = float(jnp.max(jnp.abs(y_k.astype(jnp.float32) - y_r.astype(jnp.float32))))
+    assert err / scale < 2e-2

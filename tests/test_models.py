@@ -1,0 +1,117 @@
+"""Per-arch smoke tests (reduced configs) + serve-path consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.models import get_model
+from repro.models.modules import unembed
+
+FAMILIES = ["tinyllama-1.1b", "mixtral-8x22b", "kimi-k2-1t-a32b",
+            "recurrentgemma-2b", "rwkv6-7b", "whisper-base",
+            "chatglm3-6b", "qwen2-vl-7b"]
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.pos_type == "mrope":
+        batch["positions"] = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (3, b, s))
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jax.random.normal(key, (b, cfg.enc_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward(arch, key):
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    hidden, aux = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    assert hidden.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.isfinite(hidden.astype(jnp.float32)).all())
+    hw = model.head_weight(params)
+    assert hw.shape == (cfg.d_model, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_forward(arch, key):
+    cfg = get_config(arch, reduced=True).replace(compute_dtype="float32",
+                                                 param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(key)
+    T = 12
+    batch = _batch(cfg, key, b=2, s=T)
+    hidden, _ = model.forward(params, batch)
+    full_logits = unembed(hidden[:, -1:], model.head_weight(params).T, jnp.float32)[:, 0]
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :T - 1]
+    if cfg.pos_type == "mrope":
+        pre["positions"] = batch["positions"][..., :T - 1]
+    _, cache = model.prefill(params, pre, cache_dtype=jnp.float32, max_len=T + 4)
+    dec = {"tokens": batch["tokens"][:, T - 1:T]}
+    if cfg.pos_type == "mrope":
+        dec["positions"] = batch["positions"][..., T - 1:T]
+    logits, _ = model.decode_step(params, cache, dec, jnp.int32(T - 1))
+    scale = float(jnp.max(jnp.abs(full_logits))) or 1.0
+    assert float(jnp.max(jnp.abs(logits - full_logits))) < 1e-3 * max(scale, 1.0)
+
+
+def test_sliding_window_prefill_beyond_window(key):
+    """SWA ring cache: prefill longer than the window, then decode."""
+    cfg = get_config("mixtral-8x22b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32", window=8)
+    model = get_model(cfg)
+    params = model.init(key)
+    T = 24  # 3x window
+    toks = jax.random.randint(key, (1, T), 0, cfg.vocab_size)
+    hidden, _ = model.forward(params, {"tokens": toks})
+    full_logits = unembed(hidden[:, -1:], model.head_weight(params).T, jnp.float32)[:, 0]
+    _, cache = model.prefill(params, {"tokens": toks[:, :T - 1]},
+                             cache_dtype=jnp.float32, max_len=T)
+    logits, _ = model.decode_step(params, cache, {"tokens": toks[:, T - 1:]},
+                                  jnp.int32(T - 1))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full_logits),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_multi_step_decode_chain(key):
+    """Decode 6 tokens one-by-one == forward over the full sequence."""
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(key)
+    toks = jax.random.randint(key, (1, 14), 0, cfg.vocab_size)
+    _, cache = model.prefill(params, {"tokens": toks[:, :8]},
+                             cache_dtype=jnp.float32, max_len=20)
+    outs = []
+    for t in range(8, 14):
+        logits, cache = model.decode_step(params, cache, {"tokens": toks[:, t:t + 1]},
+                                          jnp.int32(t))
+        outs.append(logits)
+    hidden, _ = model.forward(params, {"tokens": toks})
+    ref = unembed(hidden[:, -1:], model.head_weight(params).T, jnp.float32)[:, 0]
+    np.testing.assert_allclose(np.asarray(outs[-1]), np.asarray(ref), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "rwkv6-7b", "recurrentgemma-2b",
+                                  "mixtral-8x22b", "whisper-base"])
+def test_train_step_smoke(arch, key):
+    from repro.config import TrainConfig
+    from repro.train.step import build_train_step, init_train_state
+    cfg = get_config(arch, reduced=True)
+    model = get_model(cfg)
+    tc = TrainConfig(global_batch=2, seq_len=16, optimizer="adamw", remat="dots")
+    state = init_train_state(model, tc, key)
+    step = jax.jit(build_train_step(model, tc))
+    batch = _batch(cfg, key)
+    batch["targets"] = jnp.roll(batch["tokens"], -1, axis=1)
+    batch["loss_mask"] = jnp.ones((2, 16), jnp.float32)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state.step) == 1
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in
+                zip(jax.tree.leaves(state.params), jax.tree.leaves(new_state.params)))
+    assert delta > 0

@@ -1,0 +1,59 @@
+"""Optimizers + schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import apply_optimizer, init_optimizer, warmup_cosine
+
+
+def test_adamw_matches_reference():
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, -0.2, 0.3])}
+    st = init_optimizer("adamw", p)
+    new_p, st2, _ = apply_optimizer(st, p, g, lr=jnp.float32(0.1), b1=0.9, b2=0.999)
+    # reference: step 1 with bias correction => update = sign-ish g/|g|
+    mu = 0.1 * np.asarray(g["w"]); nu = 0.001 * np.asarray(g["w"])**2
+    u = (mu / (1 - 0.9)) / (np.sqrt(nu / (1 - 0.999)) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(p["w"]) - 0.1 * u, rtol=1e-5)
+
+
+def _rosenbrockish(kind, steps, lr):
+    def loss(p):
+        return jnp.sum((p["a"] - 3.0) ** 2) + jnp.sum((p["b"] @ p["b"].T - jnp.eye(4)) ** 2)
+    p = {"a": jnp.zeros((5,)), "b": jnp.eye(4) * 0.1}
+    st = init_optimizer(kind, p)
+    for _ in range(steps):
+        l, g = jax.value_and_grad(loss)(p)
+        p, st, _ = apply_optimizer(st, p, g, lr=jnp.float32(lr))
+    return float(loss(p))
+
+
+def test_adamw_converges():
+    assert _rosenbrockish("adamw", 200, 0.05) < 0.05
+
+
+def test_adafactor_converges():
+    assert _rosenbrockish("adafactor", 200, 0.05) < 0.2
+
+
+def test_adafactor_factored_state_small():
+    p = {"w": jnp.zeros((64, 128))}
+    st = init_optimizer("adafactor", p)
+    n_state = sum(x.size for x in jax.tree.leaves(st.inner))
+    assert n_state == 64 + 128  # vr + vc, no full second moment
+
+
+def test_grad_clip():
+    p = {"w": jnp.asarray([0.0])}
+    g = {"w": jnp.asarray([100.0])}
+    st = init_optimizer("adamw", p)
+    _, _, m = apply_optimizer(st, p, g, lr=jnp.float32(0.1), grad_clip=1.0)
+    assert abs(float(m["grad_norm"]) - 100.0) < 1e-3  # reported pre-clip
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, 10, 100)
+    assert abs(float(s(jnp.int32(0))) - 0.1) < 1e-6  # warms from lr/warmup
+    assert abs(float(s(jnp.int32(9))) - 1.0) < 1e-6
+    assert float(s(jnp.int32(100))) < 0.11
+    assert float(s(jnp.int32(55))) < float(s(jnp.int32(20)))

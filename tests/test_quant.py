@@ -1,0 +1,33 @@
+"""INT4 weight quantization (paper w4a16)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dequantize_int4, fake_quant_int4, pack_int4, quantize_int4, unpack_int4
+
+
+def test_pack_unpack_roundtrip():
+    q = np.random.randint(-8, 8, size=(5, 64)).astype(np.int8)
+    out = np.asarray(unpack_int4(pack_int4(q)))
+    np.testing.assert_array_equal(out, q)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 9), groups=st.integers(1, 4), scale=st.floats(0.01, 100.0))
+def test_property_quant_error_bound(rows, groups, scale):
+    g = 32
+    w = (np.random.randn(rows, groups * g) * scale).astype(np.float32)
+    q = quantize_int4(w, group_size=g)
+    wd = np.asarray(dequantize_int4(q, jnp.float32))
+    # symmetric int4: |err| <= scale/2 + |q|*scale*2^-8 (bf16-stored scales)
+    gmax = np.abs(w.reshape(rows, groups, g)).max(-1, keepdims=True)
+    bound = gmax / 7 / 2 + gmax * 2.0 ** -8
+    bound = np.broadcast_to(bound, w.reshape(rows, groups, g).shape).reshape(w.shape)
+    assert np.all(np.abs(w - wd) <= bound * 1.01 + 1e-7)
+
+
+def test_fake_quant_idempotent():
+    w = np.random.randn(8, 128).astype(np.float32)
+    w1 = np.asarray(fake_quant_int4(jnp.asarray(w)))
+    w2 = np.asarray(fake_quant_int4(jnp.asarray(w1)))
+    np.testing.assert_allclose(w1, w2, atol=1e-6)

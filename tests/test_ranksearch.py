@@ -1,0 +1,33 @@
+"""Rank/factorization auto-search."""
+import numpy as np
+import pytest
+
+from repro.core.ranksearch import RankChoice, search_spec, spec_for_layer, tt_error
+
+
+def test_target_cr():
+    c = search_spec(4096, 4096, target_cr=100.0)
+    assert c.cr >= 100.0
+    assert c.spec.n_in == 4096 and c.spec.n_out == 4096
+
+
+def test_error_budget_semantics():
+    w = np.random.randn(64, 128)
+    c = search_spec(128, 64, max_error=0.95, weight=w, ranks=(2, 4, 8))
+    # budget satisfiable at 0.95 for random matrices -> returned spec honors it
+    assert c.rel_error is not None and c.rel_error <= 0.95
+    # and it is the max-CR spec among those that honor it
+    c_lower = search_spec(128, 64, max_error=0.5, weight=w, ranks=(2, 4, 8))
+    if c_lower.rel_error <= 0.5:  # if satisfiable, tighter budget can't raise CR
+        assert c.cr >= c_lower.cr
+
+
+def test_paper_default_d4_r16():
+    c = search_spec(4096, 11008)
+    assert c.spec.d == 4 and max(c.spec.ranks) == 16
+
+
+def test_error_decreases_with_rank():
+    w = np.random.randn(64, 64)
+    errs = [tt_error(w, spec_for_layer(64, 64, rank=r, d=3)) for r in (2, 8, 32)]
+    assert errs[0] > errs[1] > errs[2]
