@@ -1,0 +1,137 @@
+"""Backfills for newer-JAX mesh APIs on jax 0.4.x.
+
+The codebase is written against the current jax API surface
+(``jax.set_mesh``, ``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``).  The pinned container toolchain
+ships jax 0.4.37, where these live elsewhere or don't exist yet.  This
+module installs equivalents *only when missing* (every patch is gated on a
+hasattr/signature probe, so on a current jax it is a no-op) and is imported
+from ``repro/__init__.py`` so any ``import repro.*`` makes the shims
+available before user code touches a mesh.
+
+It also owns the active-mesh stack that backs ``repro.dist.api``:
+``set_mesh`` pushes here, ``active_mesh()`` reads here (falling back to the
+classic ``with mesh:`` resource env and, on new jax, the abstract mesh).
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_state, "meshes"):
+        _state.meshes = []
+    return _state.meshes
+
+
+def active_mesh():
+    """The mesh made current by ``jax.set_mesh`` (or ``with mesh:``), else None."""
+    st = _stack()
+    if st:
+        return st[-1]
+    try:  # classic pjit resource env (`with mesh:`)
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:  # noqa: BLE001 - internal layout differs across versions
+        pass
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        try:
+            m = get_abstract()
+            if m is not None and getattr(m, "axis_names", ()):
+                return m
+        except Exception:  # noqa: BLE001
+            pass
+    return None
+
+
+def manual_axis_names() -> set:
+    """Axis names currently bound as manual/mapped (inside shard_map et al.)."""
+    try:
+        from jax._src.core import get_axis_env
+
+        return set(get_axis_env().axis_sizes)
+    except Exception:  # noqa: BLE001
+        return set()
+
+
+class _SetMesh:
+    """Context manager mimicking ``jax.set_mesh``: tracks the mesh for
+    :func:`active_mesh` and enters the legacy resource-env context so
+    PartitionSpec-based APIs resolve too."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _stack().append(self.mesh)
+        self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        self.mesh.__exit__(*exc)
+        _stack().pop()
+        return False
+
+
+def _install():
+    # Newer jax defaults to the partitionable threefry implementation, whose
+    # values are invariant to output sharding; 0.4.x defaults to the legacy
+    # scheme, which makes sharded-vs-single-device init diverge.  Align with
+    # the target semantics.
+    try:
+        jax.config.update("jax_threefry_partitionable", True)
+    except Exception:  # noqa: BLE001
+        pass
+
+    # jax.sharding.AxisType (Auto / Explicit / Manual)
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # jax.make_mesh(..., axis_types=...)
+    try:
+        has_axis_types = "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        has_axis_types = True
+    if not has_axis_types:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            del axis_types  # 0.4.x meshes are implicitly Auto
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # jax.set_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _SetMesh
+
+    # jax.shard_map (top-level, check_vma spelling)
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, check_rep=None, **kw):
+            if check_rep is None:
+                check_rep = True if check_vma is None else check_vma
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=check_rep, **kw)
+
+        jax.shard_map = shard_map
+
+
+_install()

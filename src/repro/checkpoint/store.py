@@ -28,6 +28,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from ..dist.collectives import reshard
+
 _SEP = "/"
 
 
@@ -98,11 +100,8 @@ def restore_checkpoint(ckpt_dir: str | Path, step: int, target_tree, *,
         raise KeyError(f"checkpoint missing leaves: {missing[:5]} …")
     leaves = [arrays[n] for n in names]
     treedef = jax.tree_util.tree_structure(target_tree)
-    if shardings is not None:
-        sh_leaves = treedef.flatten_up_to(shardings)
-        leaves = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
-    else:
-        leaves = [jax.numpy.asarray(a) for a in leaves]
+    sh_leaves = None if shardings is None else treedef.flatten_up_to(shardings)
+    leaves = reshard(leaves, sh_leaves)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]
 
 

@@ -1,0 +1,18 @@
+"""repro.dist — sharding & distributed execution.
+
+Layering: models annotate with :func:`constrain` and the :data:`BATCH`
+contract (api), launchers pick parameter layouts (sharding), pipeline/
+compression/collectives are the execution primitives the integration
+programs under ``tests/dist_progs/`` exercise on 8 fake devices and
+``launch/dryrun.py`` lowers on 512.
+"""
+from .api import (  # noqa: F401
+    BATCH,
+    batch_axes,
+    constrain,
+    current_abstract_mesh,
+)
+from .collectives import expert_all_to_all, reshard, reshard_tree  # noqa: F401
+from .compression import compressed_pmean, compressed_pmean_ef  # noqa: F401
+from .pipeline import pipeline_apply  # noqa: F401
+from .sharding import param_pspecs, param_shardings  # noqa: F401

@@ -1,0 +1,42 @@
+"""Shared collective / resharding helpers.
+
+``expert_all_to_all`` is the MoE dispatch primitive (tokens bucketed by
+destination shard exchange over the ``model`` axis — see ``models/moe.py``);
+``reshard`` is the elastic-checkpoint primitive (place a host tree onto an
+arbitrary target sharding, growing or shrinking the mesh — see
+``checkpoint/store.py``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def expert_all_to_all(x: jax.Array, axis_name: str, *, split_axis: int = 0,
+                      concat_axis: int = 0) -> jax.Array:
+    """Tiled all-to-all over ``axis_name``: row-block i of this shard goes to
+    shard i.  Shape is preserved; ``x.shape[split_axis]`` must divide by the
+    axis size.  Must be called inside ``shard_map``."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+
+
+def reshard(leaves: list, shardings: list | None) -> list:
+    """Place host arrays onto target shardings (one device_put per leaf).
+
+    ``shardings`` None (or a None entry) leaves that array on the default
+    device.  This is the whole elasticity story: restoring onto a bigger or
+    smaller mesh than the one that saved is just a different target here.
+    """
+    if shardings is None:
+        return [jax.numpy.asarray(a) for a in leaves]
+    return [jax.numpy.asarray(a) if s is None else jax.device_put(a, s)
+            for a, s in zip(leaves, shardings)]
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """Pytree convenience wrapper over :func:`reshard`."""
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    sh_flat = None if shardings is None else treedef.flatten_up_to(shardings)
+    return jax.tree_util.tree_unflatten(treedef, reshard(flat, sh_flat))

@@ -1,0 +1,100 @@
+"""Parameter PartitionSpecs over ``("data", "model")`` (optionally "pod") meshes.
+
+Role-aware rules, derived from the pytree path (the same names ``models/``
+uses when building params):
+
+  * TT cores ``.../cores/k``: shard the **last** dim — the ``m_k · r_{k+1}``
+    output dim of the matrix-layout core — over ``model``.  The staged
+    contraction (and the Pallas ``tt_linear`` kernel) contracts over the
+    *row* dim ``r_k · n_k``, so an output-dim shard computes its slice of
+    every stage locally; no collective inside the TT segment.
+  * embedding ``table``: vocab over ``model`` (GSPMD turns the masked
+    lookup into local-gather + AllReduce).
+  * column-parallel roles (wq/wk/wv/up/gate/router/head): out-features over
+    ``model``; row-parallel roles (wo/down): in-features over ``model``
+    (Megatron pairing — one AllReduce per block).
+  * int4 ``qweight``/``scales``: out-features over ``model`` (the packed
+    in-dim must stay whole for nibble unpacking).
+  * stacked MoE ``experts``: expert dim over ``model`` (matches the
+    ``shard_map`` in_specs of the EP path, so dispatch needs no reshard).
+  * ``fsdp=True`` additionally shards one remaining dim over ``data``
+    (ZeRO-3 flavored); the leading layer-stack dim of scanned segments is
+    never sharded (scan slices it every iteration).
+
+An axis is only assigned where the dim size divides the axis size — anything
+else stays replicated, so every spec is always legal for ``device_put``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_COL_ROLES = {"wq", "wk", "wv", "up", "gate", "router", "head"}
+_ROW_ROLES = {"wo", "down"}
+
+
+def _path_parts(path) -> list[str]:
+    out = []
+    for p in path:
+        out.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
+    return out
+
+
+def _model_dim(parts: list[str], shape) -> int | None:
+    """Preferred dim to shard over `model` for this leaf, or None."""
+    nd = len(shape)
+    if nd == 0:
+        return None
+    if "experts" in parts and nd >= 3:
+        # (E, ...) standalone or (L, E, ...) layer-stacked
+        return 1 if nd >= 4 else 0
+    if "cores" in parts:
+        return nd - 1
+    if "table" in parts:
+        return 0
+    if "qweight" in parts or "scales" in parts:
+        return max(nd - 2, 0)
+    leaf = parts[-1]
+    role = parts[-2] if len(parts) >= 2 else ""
+    if leaf == "w":
+        if role in _ROW_ROLES:
+            return nd - 2 if nd >= 2 else None
+        if role in _COL_ROLES:
+            return nd - 1
+        return nd - 1 if nd >= 2 else None
+    return None  # biases, norm scales, cache pos, ... stay model-replicated
+
+
+def _leaf_pspec(parts: list[str], shape, msize: int, dsize: int, fsdp: bool) -> P:
+    nd = len(shape)
+    axes: list = [None] * nd
+    stack_dims = {0} if nd >= 3 else set()  # scanned layer stacks stay whole
+
+    md = _model_dim(parts, shape)
+    if md is not None and msize > 1 and shape[md] % msize == 0 and md not in stack_dims:
+        axes[md] = "model"
+    if fsdp and dsize > 1:
+        # largest remaining dim divisible by the data-axis size
+        cands = [d for d in range(nd)
+                 if axes[d] is None and d not in stack_dims and shape[d] % dsize == 0]
+        if cands:
+            axes[max(cands, key=lambda d: shape[d])] = "data"
+    return P(*axes)
+
+
+def param_pspecs(params, mesh, fsdp: bool = True):
+    """PartitionSpec tree for a parameter pytree (arrays or ShapeDtypeStructs)."""
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dsize = mesh.shape["data"] if "data" in mesh.axis_names else 1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_leaf_pspec(_path_parts(path), leaf.shape, msize, dsize, fsdp)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, mesh, fsdp: bool = True):
+    """Same tree as :func:`param_pspecs` but as NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh, fsdp),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -37,7 +37,7 @@ VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom below ~16 MiB/core
 def pick_block_b(spec: TTSpec, batch: int, dtype_bytes: int = 4) -> int:
     """Largest power-of-two token block whose working set fits VMEM."""
     per_token = (spec.n_in + spec.n_out + 2 * spec.max_intermediate()) * dtype_bytes
-    cores = spec.n_params() * 4
+    cores = spec.n_params() * dtype_bytes
     bb = 1
     while bb * 2 <= batch and (bb * 2) * per_token + cores <= VMEM_BUDGET_BYTES:
         bb *= 2

@@ -28,6 +28,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..config import ModelConfig
 from ..dist.api import batch_axes, current_abstract_mesh
+from ..dist.collectives import expert_all_to_all
 from .modules import LinearSpec, apply_mlp, init_mlp, linear_spec, mlp_specs, stack_init
 
 
@@ -188,9 +189,8 @@ def _moe_ep(params_local, x, specs, cfg: ModelConfig, compute_dtype, e_l, n_shar
     send_eid = send_eid.at[dest, oob].set(fe_s % e_l, mode="drop")
 
     # --- exchange over the model axis ---
-    recv_x = jax.lax.all_to_all(send_x, "model", split_axis=0, concat_axis=0, tiled=True)
-    recv_eid = jax.lax.all_to_all(send_eid[..., None], "model", split_axis=0,
-                                  concat_axis=0, tiled=True)[..., 0]
+    recv_x = expert_all_to_all(send_x, "model")
+    recv_eid = expert_all_to_all(send_eid[..., None], "model")[..., 0]
 
     # --- bucket received tokens per local expert ---
     r = n_shards * cap_send
@@ -213,8 +213,7 @@ def _moe_ep(params_local, x, specs, cfg: ModelConfig, compute_dtype, e_l, n_shar
     # --- un-bucket, send back, combine ---
     y_sorted = h.at[e2_idx, pos2].get(mode="fill", fill_value=0)  # (R, D)
     y_slots = jnp.zeros((r, d), compute_dtype).at[order2].set(y_sorted)
-    back = jax.lax.all_to_all(y_slots.reshape(n_shards, cap_send, d), "model",
-                              split_axis=0, concat_axis=0, tiled=True)
+    back = expert_all_to_all(y_slots.reshape(n_shards, cap_send, d), "model")
     contrib = back.at[dest, oob].get(mode="fill", fill_value=0)  # (TK, D)
     y = jnp.zeros((t, d), jnp.float32)
     y = y.at[tok_s].add(contrib.astype(jnp.float32) * gate_s[:, None])

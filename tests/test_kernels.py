@@ -59,6 +59,44 @@ def test_tt_kernel_block_picker():
     assert bb * per_token <= 12 * 2**20  # VMEM budget honored
 
 
+def test_tt_kernel_block_picker_uses_dtype_bytes():
+    """The VMEM footprint (cores included) must scale with the element size:
+    halving dtype_bytes must never shrink the chosen block."""
+    spec = TTSpec.make(4096, 13696, 16, in_modes=(8, 8, 8, 8), out_modes=(4, 4, 8, 107))
+    bb4 = pick_block_b(spec, 4096, dtype_bytes=4)
+    bb2 = pick_block_b(spec, 4096, dtype_bytes=2)
+    assert bb2 >= bb4
+    # fp16/bf16 budget accounting: cores also counted at dtype_bytes
+    per_token = (spec.n_in + spec.n_out + 2 * spec.max_intermediate()) * 2
+    assert bb2 * per_token + spec.n_params() * 2 <= 12 * 2**20
+
+
+@pytest.mark.parametrize("b,block_b,dtype,use_res", [
+    (7, 4, jnp.float32, True),    # pad 7 -> 8, residual padded too
+    (13, 8, jnp.bfloat16, True),  # pad 13 -> 16
+    (5, 8, jnp.float32, False),   # batch smaller than one block
+    (9, 2, jnp.float32, True),    # odd batch, tiny block
+])
+def test_tt_kernel_padding_with_fused_epilogue(b, block_b, dtype, use_res, key):
+    """Batch not divisible by block_b combined with the scale/bias(/residual)
+    epilogue, checked against the kernels/ref.py oracle."""
+    spec = TTSpec.make(256, 512, 8, d=4)
+    cores = [c.astype(dtype) for c in init_tt_linear(key, spec, jnp.float32)["cores"]]
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (b, 256), jnp.float32).astype(dtype)
+    sc = jax.random.normal(k2, (512,), jnp.float32).astype(dtype)
+    bi = jax.random.normal(k3, (512,), jnp.float32).astype(dtype)
+    res = jax.random.normal(k4, (b, 512), jnp.float32).astype(dtype) if use_res else None
+    y_k = tt_linear_pallas(x, cores, spec, scale=sc, bias=bi, residual=res,
+                           block_b=block_b, interpret=True)
+    y_r = ref.tt_linear_bn_res(x, cores, spec, scale=sc, bias=bi, residual=res)
+    assert y_k.shape == (b, 512)
+    y_k32, y_r32 = y_k.astype(jnp.float32), y_r.astype(jnp.float32)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    scale_ref = float(jnp.max(jnp.abs(y_r32))) or 1.0
+    assert float(jnp.max(jnp.abs(y_k32 - y_r32))) / scale_ref < tol
+
+
 @pytest.mark.parametrize("b,k,m,g,dtype", [
     (8, 256, 128, 64, jnp.float32),
     (130, 4096, 300, 128, jnp.bfloat16),

@@ -1,7 +1,11 @@
 """INT4 weight quantization (paper w4a16)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: skip only the property-based tests
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core import dequantize_int4, fake_quant_int4, pack_int4, quantize_int4, unpack_int4
 

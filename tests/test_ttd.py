@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: skip only the property-based tests
+    from conftest import given, settings, st  # noqa: F401
 
 from repro.core import (
     TTSpec, compression_ratio, cores_to_matrices, factorize,
