@@ -1,20 +1,32 @@
 """Kernel-level microbenchmarks (CPU wall-time, structural comparison).
 
-Compares the per-call cost of: dense matmul vs staged TT contraction (the
-pure-JAX path the dry-run lowers) for the paper's layer shapes.  On CPU,
-times track FLOPs, so the TT FLOP reduction (8-18x for Table-I shapes) shows
-directly; the Pallas kernel's VMEM behaviour can't be timed here (interpret
-mode is Python) and is validated for correctness in tests/test_kernels.py.
+Two modes:
+
+* default — per-call cost of dense matmul vs staged TT contraction (the
+  pure-JAX path the dry-run lowers) for the paper's layer shapes.  On CPU,
+  times track FLOPs, so the TT FLOP reduction (8-18x for Table-I shapes)
+  shows directly.
+* ``--dispatch`` (also implied by ``--smoke``) — per-layer ref vs
+  pallas-interpret numbers through ``repro.kernels.dispatch`` for the tt and
+  int4 kinds with fused epilogues, written to ``BENCH_kernels.json``.  The
+  interpreter executes the exact kernel body on CPU, so this validates the
+  production dispatch path end-to-end (and guards it against rot in CI via
+  ``--smoke``); real VMEM behaviour needs a TPU.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant import quantize_int4
 from repro.core.tt_linear import init_tt_linear, tt_linear_apply
 from repro.core.ttd import TTSpec
+from repro.kernels import dispatch
 
 SHAPES = [
     ("chatglm_O", 4096, 4096, (16, 8, 8, 4), (4, 8, 8, 16)),
@@ -22,10 +34,13 @@ SHAPES = [
     ("llama_mlp_dn", 11008, 4096, (43, 16, 4, 4), (4, 8, 8, 16)),
 ]
 
+SMOKE_SHAPES = [
+    ("smoke_O", 256, 512, (4, 4, 4, 4), (8, 8, 4, 2)),
+]
+
 
 def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(f(*args))
@@ -51,5 +66,93 @@ def run(report=print, batch=64):
     return rows
 
 
+def _rel_err(a, b):
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    scale = float(jnp.max(jnp.abs(b))) or 1.0
+    return float(jnp.max(jnp.abs(a - b))) / scale
+
+
+def run_dispatch(report=print, *, batch=32, iters=3, smoke=False,
+                 out_path="BENCH_kernels.json"):
+    """Per-layer ref vs pallas-interpret through the dispatch layer."""
+    key = jax.random.PRNGKey(0)
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    rank = 4 if smoke else 16
+    rows = []
+    for name, n, m, nm, mm in shapes:
+        spec = TTSpec.make(n, m, rank, in_modes=nm, out_modes=mm)
+        cores = init_tt_linear(key, spec, jnp.float32)["cores"]
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        x = jax.random.normal(k1, (batch, n), jnp.float32)
+        sc = jax.random.normal(k2, (m,), jnp.float32)
+        bi = jax.random.normal(k3, (m,), jnp.float32)
+        res = jax.random.normal(k4, (batch, m), jnp.float32)
+
+        def tt(backend):
+            f = jax.jit(lambda x, res: dispatch.tt_linear(
+                x, cores, spec, scale=sc, bias=bi, residual=res, backend=backend))
+            return f, (x, res)
+
+        f_ref, args = tt("ref")
+        f_pl, _ = tt("pallas-interpret")
+        y_ref, y_pl = f_ref(*args), f_pl(*args)
+        row = {"name": f"{name}_tt_bn_res", "kind": "tt",
+               "n_in": n, "n_out": m, "batch": batch,
+               "ref_us": _time(f_ref, *args, iters=iters),
+               "pallas_interpret_us": _time(f_pl, *args, iters=iters),
+               "max_rel_err": _rel_err(y_pl, y_ref)}
+        rows.append(row)
+
+        # int4 (w4a16) with bias+residual epilogue for the same layer shape
+        group = 64 if smoke else 128
+        w = jax.random.normal(k2, (m, n), jnp.float32) / (n ** 0.5)
+        q = quantize_int4(w, group)
+
+        def i4(backend):
+            f = jax.jit(lambda x, res: dispatch.int4_matmul(
+                x, q["qweight"], q["scales"], group=group, bias=bi,
+                residual=res, backend=backend))
+            return f, (x, res)
+
+        f_ref, args = i4("ref")
+        f_pl, _ = i4("pallas-interpret")
+        y_ref, y_pl = f_ref(*args), f_pl(*args)
+        rows.append({"name": f"{name}_int4_bias_res", "kind": "int4",
+                     "n_in": n, "n_out": m, "batch": batch,
+                     "ref_us": _time(f_ref, *args, iters=iters),
+                     "pallas_interpret_us": _time(f_pl, *args, iters=iters),
+                     "max_rel_err": _rel_err(y_pl, y_ref)})
+
+    for r in rows:
+        report(f"{r['name']:24s} B={r['batch']}: ref {r['ref_us']:9.1f}us  "
+               f"pallas-interpret {r['pallas_interpret_us']:9.1f}us  "
+               f"max_rel_err {r['max_rel_err']:.2e}")
+        if r["max_rel_err"] > 1e-4:
+            raise SystemExit(f"dispatch parity failed for {r['name']}: "
+                             f"{r['max_rel_err']:.3e}")
+    rec = {"mode": "smoke" if smoke else "full", "batch": batch, "rows": rows}
+    Path(out_path).write_text(json.dumps(rec, indent=1))
+    report(f"wrote {out_path}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dispatch", action="store_true",
+                    help="benchmark ref vs pallas-interpret through the dispatch layer")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape dispatch parity run (CI gate; implies --dispatch)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    if args.dispatch or args.smoke:
+        run_dispatch(batch=args.batch or (8 if args.smoke else 32),
+                     iters=1 if args.smoke else 3, smoke=args.smoke,
+                     out_path=args.out)
+    else:
+        run(batch=args.batch or 64)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -123,6 +123,12 @@ class ModelConfig:
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"
 
+    # --- kernel execution backend (repro.kernels.dispatch) ---
+    # "auto" -> Pallas kernels on TPU, pure-JAX reference elsewhere; the
+    # REPRO_KERNEL_BACKEND env var (and per-role REPRO_KERNEL_BACKEND_<ROLE>
+    # vars) override this at trace time.
+    kernel_backend: str = "auto"  # auto | ref | pallas-interpret | pallas
+
     # --- attention blocking (pure-JAX flash) ---
     q_block: int = 1024
     kv_block: int = 1024

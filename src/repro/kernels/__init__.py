@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels + the backend-dispatching linear execution layer.
+
+``dispatch`` is the public entry: every model linear (dense | tt | int4)
+routes through it with fused epilogue operands; ``tt_linear``/``int4_matmul``
+hold the kernel bodies, ``ref`` the pure-jnp oracles, ``epilogue`` the shared
+post-op semantics.
+"""
+from .dispatch import (  # noqa: F401
+    BACKENDS,
+    ENV_VAR,
+    backend_override,
+    dense_linear,
+    int4_matmul,
+    resolve_backend,
+    tt_linear,
+)

@@ -1,0 +1,149 @@
+"""Backend-dispatching linear execution layer.
+
+Every linear in the model zoo — dense, Tensor-Train (paper §II), int4 w4a16
+(paper §IV) — routes through this module, which picks an execution backend
+and carries the fused epilogue operands (scale, bias, residual, activation —
+the paper's TTDLinear-BN(-Res) operator fusion, §III.A) all the way into the
+kernel instead of applying them as separate HBM round-trips.
+
+Backends
+--------
+``ref``              pure-JAX staged contraction / dequant matmul (CPU, and
+                     the oracle every kernel is tested against)
+``pallas-interpret`` the Pallas kernels executed by the Pallas interpreter
+                     (CPU validation of the exact kernel body)
+``pallas``           the Pallas kernels lowered via Mosaic (real TPU)
+``auto``             ``pallas`` when ``jax.default_backend() == "tpu"``,
+                     else ``ref``
+
+Resolution order (first non-empty wins; ``auto`` then resolves per device):
+
+    explicit call arg > ``backend_override()`` context > per-role env
+    (``REPRO_KERNEL_BACKEND_<ROLE>``) > ``REPRO_KERNEL_BACKEND`` env >
+    ``ModelConfig.kernel_backend`` (carried on ``LinearSpec.backend``) > auto
+
+Resolution happens at trace time (backends are static), so a jitted step
+bakes in whatever policy was active when it was first traced.
+
+The dense kind has no Pallas kernel on purpose: XLA's native matmul already
+saturates the MXU, and the epilogue below fuses into it; the backend argument
+is accepted for uniformity and ignored.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+
+from ..core.ttd import TTSpec
+from . import ref
+from .epilogue import apply_epilogue
+from .int4_matmul import int4_matmul_pallas
+from .tt_linear import tt_linear_pallas
+
+BACKENDS = ("ref", "pallas-interpret", "pallas")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_override: contextvars.ContextVar[str | None] = contextvars.ContextVar(
+    "repro_kernel_backend_override", default=None)
+
+
+def _check(backend: str) -> str:
+    if backend not in BACKENDS + ("auto",):
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"expected one of {BACKENDS + ('auto',)}")
+    return backend
+
+
+@contextlib.contextmanager
+def backend_override(backend: str | None):
+    """Force a backend for everything traced inside the context."""
+    if backend is None:
+        yield
+        return
+    token = _override.set(_check(backend))
+    try:
+        yield
+    finally:
+        _override.reset(token)
+
+
+def _role_env(role: str) -> str | None:
+    if not role:
+        return None
+    return os.environ.get(f"{ENV_VAR}_{re.sub(r'[^A-Za-z0-9]', '_', role).upper()}")
+
+
+def resolve_backend(explicit: str | None = None, *, role: str = "",
+                    preferred: str = "") -> str:
+    """Resolve the policy chain to a concrete backend name."""
+    for cand in (explicit, _override.get(), _role_env(role),
+                 os.environ.get(ENV_VAR), preferred or None):
+        if cand:
+            cand = _check(cand)
+            if cand != "auto":
+                return cand
+            break  # an explicit "auto" stops the chain and resolves by device
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# Dispatched ops.  All accept (..., N) inputs (leading dims flattened for the
+# kernel grids) and the full epilogue operand set; all return x.dtype.
+# ---------------------------------------------------------------------------
+def dense_linear(x, w, *, scale=None, bias=None, residual=None,
+                 activation: str | None = None, backend: str | None = None):
+    """y = act(x W [* scale] [+ b]) [+ residual];  (…, N) @ (N, M).
+
+    Epilogue runs on the f32 accumulator (XLA fuses it into the matmul);
+    ``backend`` is ignored — see module docstring.
+    """
+    del backend
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y = apply_epilogue(y, scale=scale, bias=bias, residual=residual,
+                       activation=activation)
+    return y.astype(x.dtype)
+
+
+def tt_linear(x, cores, spec: TTSpec, *, scale=None, bias=None, residual=None,
+              activation: str | None = None, backend: str | None = None,
+              block_b: int | None = None, role: str = ""):
+    """(…, N) -> (…, M) through the staged TT contraction + fused epilogue."""
+    backend = resolve_backend(backend, role=role)
+    if backend == "ref":
+        # keep leading dims intact: activation sharding (batch→data,
+        # seq→model) propagates untouched through the stages (DESIGN.md §4)
+        return ref.tt_linear_bn_res(x, cores, spec, scale=scale, bias=bias,
+                                    residual=residual, activation=activation)
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, spec.n_in)
+    rf = residual.reshape(-1, spec.n_out) if residual is not None else None
+    y = tt_linear_pallas(xf, cores, spec, scale=scale, bias=bias, residual=rf,
+                         activation=activation, block_b=block_b,
+                         interpret=(backend == "pallas-interpret"))
+    return y.reshape(*lead, spec.n_out)
+
+
+def int4_matmul(x, qweight, scales, *, group: int = 128, scale=None, bias=None,
+                residual=None, activation: str | None = None,
+                backend: str | None = None, role: str = ""):
+    """(…, K) -> (…, M) through the w4a16 kernel + fused epilogue."""
+    backend = resolve_backend(backend, role=role)
+    if backend == "ref":
+        return ref.int4_matmul(x, qweight, scales, group=group, scale=scale,
+                               bias=bias, residual=residual,
+                               activation=activation)
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    rf = residual.reshape(-1, qweight.shape[0]) if residual is not None else None
+    y = int4_matmul_pallas(xf, qweight, scales, group=group, scale=scale,
+                           bias=bias, residual=rf, activation=activation,
+                           interpret=(backend == "pallas-interpret"))
+    return y.reshape(*lead, qweight.shape[0])

@@ -1,0 +1,43 @@
+"""Shared epilogue math for the linear kernels and their references.
+
+One definition of the paper's TTDLinear-BN(-Res) post-processing (§III.A),
+used by the Pallas kernel bodies, the pure-jnp oracles, and the dispatch
+layer, so every backend applies bit-identical epilogue semantics:
+
+    y -> y * scale -> y + bias -> activation(y) -> y + residual
+
+All epilogue math runs in f32 regardless of the matmul/store dtype; callers
+cast the result back to their compute dtype once, at the end.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Names are config-level strings (hashable, usable as static jit args).
+ACTIVATIONS = {
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "gelu_exact": partial(jax.nn.gelu, approximate=False),
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
+
+
+def apply_epilogue(y, *, scale=None, bias=None, residual=None,
+                   activation: str | None = None) -> jax.Array:
+    """Fused post-ops on a matmul accumulator; returns f32."""
+    y = y.astype(jnp.float32)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation is not None:
+        y = ACTIVATIONS[activation](y)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    return y

@@ -18,11 +18,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .epilogue import apply_epilogue
 
-def _kernel(x_ref, qw_ref, sc_ref, out_ref, *, group: int, out_dtype):
+
+def _kernel(x_ref, qw_ref, sc_ref, *refs, group: int, has_scale: bool,
+            has_bias: bool, has_res: bool, activation: str | None, out_dtype):
     x = x_ref[...]  # (bb, K)
     qw = qw_ref[...]  # (bm, K//2) uint8 packed
     sc = sc_ref[...]  # (bm, K//group)
+    rest = list(refs[:-1])
+    out_ref = refs[-1]
     bm, kh = qw.shape
     k = kh * 2
     lo = (qw & 0x0F).astype(jnp.int8)
@@ -36,13 +41,31 @@ def _kernel(x_ref, qw_ref, sc_ref, out_ref, *, group: int, out_dtype):
     y = jax.lax.dot_general(x.astype(jnp.float32), w,
                             (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
+    i = 0
+    ep_scale = ep_bias = ep_res = None
+    if has_scale:
+        ep_scale, i = rest[i][...], i + 1
+    if has_bias:
+        ep_bias, i = rest[i][...], i + 1
+    if has_res:
+        ep_res = rest[i][...]
+    y = apply_epilogue(y, scale=ep_scale, bias=ep_bias, residual=ep_res,
+                       activation=activation)
     out_ref[...] = y.astype(out_dtype)
 
 
 def int4_matmul_pallas(x: jax.Array, qweight: jax.Array, scales: jax.Array, *,
                        group: int = 128, block_b: int = 128, block_m: int = 128,
+                       scale: jax.Array | None = None,
+                       bias: jax.Array | None = None,
+                       residual: jax.Array | None = None,
+                       activation: str | None = None,
                        interpret: bool = True) -> jax.Array:
-    """y = x @ dequant(qweight)^T;  x: (B, K) -> (B, M)."""
+    """y = act(x @ dequant(qweight)^T [* scale] [+ bias]) [+ residual].
+
+    x: (B, K) -> (B, M).  The epilogue operands mirror the TT kernel's
+    fused TTDLinear-BN(-Res) post-ops (scale/bias: (M,), residual: (B, M)).
+    """
     b, k = x.shape
     m = qweight.shape[0]
     assert qweight.shape == (m, k // 2), (qweight.shape, (m, k // 2))
@@ -53,23 +76,41 @@ def int4_matmul_pallas(x: jax.Array, qweight: jax.Array, scales: jax.Array, *,
     pad_b, pad_m = (-b) % bb, (-m) % bm
     if pad_b:
         x = jnp.pad(x, ((0, pad_b), (0, 0)))
+        if residual is not None:
+            residual = jnp.pad(residual, ((0, pad_b), (0, 0)))
     if pad_m:
         qweight = jnp.pad(qweight, ((0, pad_m), (0, 0)))
         scales = jnp.pad(scales, ((0, pad_m), (0, 0)))
+        scale = jnp.pad(scale, (0, pad_m)) if scale is not None else None
+        bias = jnp.pad(bias, (0, pad_m)) if bias is not None else None
+        if residual is not None:
+            residual = jnp.pad(residual, ((0, 0), (0, pad_m)))
     nb, nm = x.shape[0] // bb, qweight.shape[0] // bm
 
+    in_specs = [
+        pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+        pl.BlockSpec((bm, k // 2), lambda i, j: (j, 0)),
+        pl.BlockSpec((bm, k // group), lambda i, j: (j, 0)),
+    ]
+    extra = []
+    for vec in (scale, bias):
+        if vec is not None:
+            extra.append(vec)
+            in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+    if residual is not None:
+        extra.append(residual)
+        in_specs.append(pl.BlockSpec((bb, bm), lambda i, j: (i, j)))
+
     out = pl.pallas_call(
-        functools.partial(_kernel, group=group, out_dtype=x.dtype),
+        functools.partial(_kernel, group=group, has_scale=scale is not None,
+                          has_bias=bias is not None, has_res=residual is not None,
+                          activation=activation, out_dtype=x.dtype),
         grid=(nb, nm),
-        in_specs=[
-            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bm, k // 2), lambda i, j: (j, 0)),
-            pl.BlockSpec((bm, k // group), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], qweight.shape[0]), x.dtype),
         interpret=interpret,
-    )(x, qweight, scales)
+    )(x, qweight, scales, *extra)
     return out[:b, :m] if (pad_b or pad_m) else out
 
 

@@ -16,6 +16,7 @@ import numpy as np
 from ..core.quant import dequantize_int4
 from ..core.tt_linear import tt_linear_apply
 from ..core.ttd import TTSpec, matrices_to_cores, tt_reconstruct
+from .epilogue import apply_epilogue
 
 
 def tt_linear_staged(x: jax.Array, cores: list[jax.Array], spec: TTSpec) -> jax.Array:
@@ -27,19 +28,22 @@ def tt_linear_dense(x: jax.Array, cores: list[jax.Array], spec: TTSpec) -> jax.A
     return (np.asarray(x, np.float64) @ w.T).astype(np.asarray(x).dtype)
 
 
-def tt_linear_bn_res(x, cores, spec, scale=None, bias=None, residual=None):
-    y = tt_linear_staged(x, cores, spec).astype(jnp.float32)
-    if scale is not None:
-        y = y * scale.astype(jnp.float32) + (bias.astype(jnp.float32) if bias is not None else 0.0)
-    if residual is not None:
-        y = y + residual.astype(jnp.float32)
+def tt_linear_bn_res(x, cores, spec, scale=None, bias=None, residual=None,
+                     activation=None):
+    y = tt_linear_staged(x, cores, spec)
+    y = apply_epilogue(y, scale=scale, bias=bias, residual=residual,
+                       activation=activation)
     return y.astype(x.dtype)
 
 
 def int4_matmul(x: jax.Array, qweight: jax.Array, scales: jax.Array,
-                group: int = 128) -> jax.Array:
+                group: int = 128, *, scale=None, bias=None, residual=None,
+                activation=None) -> jax.Array:
     w = dequantize_int4({"qweight": qweight, "scales": scales}, dtype=jnp.float32)
-    return jax.lax.dot_general(
-        x.astype(jnp.float32), w, (((1,), (1,)), ((), ())),
+    y = jax.lax.dot_general(
+        x.astype(jnp.float32), w, (((x.ndim - 1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
-    ).astype(x.dtype)
+    )
+    y = apply_epilogue(y, scale=scale, bias=bias, residual=residual,
+                       activation=activation)
+    return y.astype(x.dtype)

@@ -12,8 +12,10 @@ TPU adaptation of the paper's GVSA TTD dataflow (§III.C):
   * Per-token HBM traffic is exactly N + M elements (input + output) plus the
     one-time core fetch: the memory-bound linear layer becomes bandwidth-
     optimal (paper's roofline argument, §I).
-  * Optional fused epilogue: ``y*scale + bias (+ residual)`` — the paper's
-    TTDLinear-BN(-Res) operator fusion.
+  * Optional fused epilogue: ``act(y*scale + bias) (+ residual)`` — the
+    paper's TTDLinear-BN(-Res) operator fusion; every operand is independent
+    (bias-only gives the plain biased linear).  Shared semantics live in
+    ``repro.kernels.epilogue``.
 
 The grid tiles the token dimension; ``block_b`` is chosen so the largest
 intermediate fits a VMEM budget.  Matmul shapes per stage are
@@ -30,6 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.ttd import TTSpec
+from .epilogue import apply_epilogue
 
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom below ~16 MiB/core
 
@@ -65,20 +68,23 @@ def _stage_contract(p, cores, spec: TTSpec, block_b: int):
     return p.reshape(b, spec.n_out)
 
 
-def _kernel(x_ref, *refs, spec: TTSpec, block_b: int, epilogue: str, out_dtype):
+def _kernel(x_ref, *refs, spec: TTSpec, block_b: int, has_scale: bool,
+            has_bias: bool, has_res: bool, activation: str | None, out_dtype):
     d = spec.d
     cores = [refs[k][...] for k in range(d)]
-    rest = refs[d:-1]
+    rest = list(refs[d:-1])
     out_ref = refs[-1]
     y = _stage_contract(x_ref[...], cores, spec, block_b)
     i = 0
-    if "bn" in epilogue:
-        scale, bias = rest[i][...], rest[i + 1][...]
-        y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
-        i += 2
-    if "res" in epilogue:
-        y = y + rest[i][...].astype(jnp.float32)
-        i += 1
+    scale = bias = res = None
+    if has_scale:
+        scale, i = rest[i][...], i + 1
+    if has_bias:
+        bias, i = rest[i][...], i + 1
+    if has_res:
+        res = rest[i][...]
+    y = apply_epilogue(y, scale=scale, bias=bias, residual=res,
+                       activation=activation)
     out_ref[...] = y.astype(out_dtype)
 
 
@@ -86,41 +92,42 @@ def tt_linear_pallas(x: jax.Array, cores: list[jax.Array], spec: TTSpec, *,
                      scale: jax.Array | None = None,
                      bias: jax.Array | None = None,
                      residual: jax.Array | None = None,
+                     activation: str | None = None,
                      block_b: int | None = None,
                      interpret: bool = True) -> jax.Array:
-    """y = TTLinear(x) [* scale + bias] [+ residual];  x: (B, N) -> (B, M).
+    """y = act(TTLinear(x) [* scale] [+ bias]) [+ residual];  (B, N) -> (B, M).
 
+    Any epilogue operand may be passed independently (bias without scale is
+    the plain ``y + b`` linear; scale+bias is the paper's TTDLinear-BN).
     ``interpret=True`` executes the kernel body on CPU (this container);
     ``interpret=False`` lowers via Mosaic for a real TPU.
     """
     b, n_in = x.shape
     assert n_in == spec.n_in, (n_in, spec)
-    epilogue = ""
-    extra = []
-    if scale is not None:
-        epilogue += "bn"
-        extra += [scale, bias if bias is not None else jnp.zeros_like(scale)]
-    if residual is not None:
-        epilogue += "res"
-        extra.append(residual)
 
     bb = block_b or pick_block_b(spec, b)
     pad = (-b) % bb
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
         if residual is not None:
-            extra[-1] = jnp.pad(extra[-1], ((0, pad), (0, 0)))
+            residual = jnp.pad(residual, ((0, pad), (0, 0)))
     nb = x.shape[0] // bb
 
     in_specs = [pl.BlockSpec((bb, spec.n_in), lambda i: (i, 0))]
     in_specs += [pl.BlockSpec(c.shape, lambda i: tuple([0] * c.ndim)) for c in cores]
-    if "bn" in epilogue:
-        in_specs += [pl.BlockSpec((spec.n_out,), lambda i: (0,))] * 2
-    if "res" in epilogue:
-        in_specs += [pl.BlockSpec((bb, spec.n_out), lambda i: (i, 0))]
+    extra = []
+    for vec in (scale, bias):
+        if vec is not None:
+            extra.append(vec)
+            in_specs.append(pl.BlockSpec((spec.n_out,), lambda i: (0,)))
+    if residual is not None:
+        extra.append(residual)
+        in_specs.append(pl.BlockSpec((bb, spec.n_out), lambda i: (i, 0)))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, spec=spec, block_b=bb, epilogue=epilogue,
+        functools.partial(_kernel, spec=spec, block_b=bb,
+                          has_scale=scale is not None, has_bias=bias is not None,
+                          has_res=residual is not None, activation=activation,
                           out_dtype=x.dtype),
         grid=(nb,),
         in_specs=in_specs,

@@ -57,6 +57,11 @@ def arch_cell_config(arch: str, cell: ShapeCell, *, baseline: bool = False,
         cfg = cfg.replace(max_seq_len=cell.seq_len)
     if os.environ.get("DRYRUN_MOE_IMPL"):
         cfg = cfg.replace(moe_impl=os.environ["DRYRUN_MOE_IMPL"])
+    # record the env's dispatch backend on the config itself: the env already
+    # outranks cfg in resolve_backend's chain, but pinning here makes the
+    # lowered program reproducible from cfg alone (env may change pre-trace)
+    if os.environ.get("REPRO_KERNEL_BACKEND"):
+        cfg = cfg.replace(kernel_backend=os.environ["REPRO_KERNEL_BACKEND"])
     return cfg
 
 

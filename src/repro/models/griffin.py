@@ -198,11 +198,13 @@ def rec_block_seq(p, specs, cfg: ModelConfig, x, compute_dtype, h0=None, conv0=N
     y = (h.astype(compute_dtype) * g.astype(compute_dtype))
     y = constrain(y, BATCH, None, None)  # reverse hops for the TT out-proj
     y = constrain(y, BATCH, "model", None)
-    y = apply_linear(p["out"], y, specs["out"], compute_dtype)
-    x = x + y.astype(x.dtype)
+    # skip connection fused into the out-projection / MLP-down epilogues
+    x = apply_linear(p["out"], y, specs["out"], compute_dtype,
+                     residual=x).astype(x.dtype)
     x = constrain(x, BATCH, "model", None)
     hid = apply_norm(p["ln2"], x, cfg)
-    x = x + apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype).astype(x.dtype)
+    x = apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype,
+                  residual=x).astype(x.dtype)
     x = constrain(x, BATCH, "model", None)
     if return_state:
         return x, {"h": h_last, "conv": conv_state}
@@ -216,20 +218,23 @@ def rec_block_decode(p, specs, cfg: ModelConfig, x, state, compute_dtype):
     u, conv_state = causal_conv1d(p, u, state["conv"])
     h, h_last = rg_lru_step(p, specs, u, state["h"].astype(jnp.float32), compute_dtype)
     y = (h * g).astype(compute_dtype)
-    y = apply_linear(p["out"], y, specs["out"], compute_dtype)
-    x = x + y.astype(x.dtype)
+    x = apply_linear(p["out"], y, specs["out"], compute_dtype,
+                     residual=x).astype(x.dtype)
     hid = apply_norm(p["ln2"], x, cfg)
-    x = x + apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype).astype(x.dtype)
+    x = apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype,
+                  residual=x).astype(x.dtype)
     return x, {"h": h_last, "conv": conv_state.astype(state["conv"].dtype)}
 
 
 def attn_block_seq(p, specs, cfg: ModelConfig, x, rope_cs, compute_dtype,
                    return_cache=False, cache_len=0, cache_dtype=jnp.bfloat16):
     hid = apply_norm(p["ln1"], x, cfg)
-    a, kv = attn_full(p, specs, cfg, hid, rope_cs, compute_dtype, return_kv=return_cache)
-    x = x + a.astype(x.dtype)
+    a, kv = attn_full(p, specs, cfg, hid, rope_cs, compute_dtype,
+                      return_kv=return_cache, residual=x)
+    x = a.astype(x.dtype)
     hid = apply_norm(p["ln2"], x, cfg)
-    x = x + apply_mlp(p["mlp"], hid, specs.mlp_d(), cfg, compute_dtype).astype(x.dtype)
+    x = apply_mlp(p["mlp"], hid, specs.mlp_d(), cfg, compute_dtype,
+                  residual=x).astype(x.dtype)
     x = constrain(x, BATCH, "model", None)
     if return_cache:
         k, v = kv
@@ -241,10 +246,12 @@ def attn_block_seq(p, specs, cfg: ModelConfig, x, rope_cs, compute_dtype,
 
 def attn_block_decode(p, specs, cfg: ModelConfig, x, cache, rope_cs, pos, compute_dtype):
     hid = apply_norm(p["ln1"], x, cfg)
-    a, new_cache = attn_decode(p, specs, cfg, hid, rope_cs, cache, pos, compute_dtype)
-    x = x + a.astype(x.dtype)
+    a, new_cache = attn_decode(p, specs, cfg, hid, rope_cs, cache, pos,
+                               compute_dtype, residual=x)
+    x = a.astype(x.dtype)
     hid = apply_norm(p["ln2"], x, cfg)
-    x = x + apply_mlp(p["mlp"], hid, specs.mlp_d(), cfg, compute_dtype).astype(x.dtype)
+    x = apply_mlp(p["mlp"], hid, specs.mlp_d(), cfg, compute_dtype,
+                  residual=x).astype(x.dtype)
     return x, new_cache
 
 

@@ -14,18 +14,18 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..config import ModelConfig, TTDConfig
-from ..core.quant import int4_matmul_ref, quantize_int4
-from ..core.tt_linear import init_tt_linear, tt_linear_apply
+from ..config import ModelConfig
+from ..core.quant import quantize_int4
+from ..core.tt_linear import init_tt_linear
 from ..core.ttd import TTSpec
 from ..dist import constrain
+from ..kernels import dispatch
 
 # ---------------------------------------------------------------------------
 # dtype helpers
@@ -49,6 +49,7 @@ class LinearSpec:
     tt: TTSpec | None = None
     quant_group: int = 128
     role: str = ""
+    backend: str = ""  # ModelConfig.kernel_backend preference ("" -> auto)
 
 
 def linear_spec(cfg: ModelConfig, role: str, n_in: int, n_out: int, bias: bool = False,
@@ -70,13 +71,16 @@ def linear_spec(cfg: ModelConfig, role: str, n_in: int, n_out: int, bias: bool =
                 in_modes=ov.in_modes if ov else None,
                 out_modes=ov.out_modes if ov else None,
             )
-            return LinearSpec("tt", n_in, n_out, bias=bias, tt=tt, role=role)
+            return LinearSpec("tt", n_in, n_out, bias=bias, tt=tt, role=role,
+                              backend=cfg.kernel_backend)
         except ValueError:
             pass  # un-factorizable dim: fall through to dense/int4
     if cfg.quant.enabled and n_in % cfg.quant.group_size == 0:
         return LinearSpec("int4", n_in, n_out, bias=bias,
-                          quant_group=cfg.quant.group_size, role=role)
-    return LinearSpec("dense", n_in, n_out, bias=bias, role=role)
+                          quant_group=cfg.quant.group_size, role=role,
+                          backend=cfg.kernel_backend)
+    return LinearSpec("dense", n_in, n_out, bias=bias, role=role,
+                      backend=cfg.kernel_backend)
 
 
 def init_linear(key: jax.Array, spec: LinearSpec, param_dtype) -> dict[str, Any]:
@@ -101,23 +105,36 @@ def init_linear(key: jax.Array, spec: LinearSpec, param_dtype) -> dict[str, Any]
 
 
 def apply_linear(params: dict[str, Any], x: jax.Array, spec: LinearSpec,
-                 compute_dtype=jnp.bfloat16) -> jax.Array:
-    """y = x W (+ b); x: (..., n_in) -> (..., n_out)."""
+                 compute_dtype=jnp.bfloat16, *, scale: jax.Array | None = None,
+                 residual: jax.Array | None = None,
+                 activation: str | None = None,
+                 backend: str | None = None) -> jax.Array:
+    """y = act(x W [* scale] + b) [+ residual]; x: (..., n_in) -> (..., n_out).
+
+    All kinds route through ``repro.kernels.dispatch``; the epilogue operands
+    ride into the kernel (the paper's TTDLinear-BN(-Res) fusion) instead of
+    being applied as separate ops.  ``backend`` overrides the resolved policy
+    (see dispatch.resolve_backend).
+    """
     x = x.astype(compute_dtype)
+    backend = dispatch.resolve_backend(backend, role=spec.role,
+                                       preferred=spec.backend)
+    bias = params["b"] if spec.bias else None
     if spec.kind == "dense":
-        y = jax.lax.dot_general(
-            x, params["w"].astype(compute_dtype),
-            (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        ).astype(compute_dtype)
+        y = dispatch.dense_linear(x, params["w"].astype(compute_dtype),
+                                  scale=scale, bias=bias, residual=residual,
+                                  activation=activation, backend=backend)
     elif spec.kind == "tt":
-        y = tt_linear_apply(params, x, spec.tt)
+        y = dispatch.tt_linear(x, params["cores"], spec.tt, scale=scale,
+                               bias=bias, residual=residual,
+                               activation=activation, backend=backend)
     elif spec.kind == "int4":
-        y = int4_matmul_ref(x, params)
+        y = dispatch.int4_matmul(x, params["qweight"], params["scales"],
+                                 group=spec.quant_group, scale=scale, bias=bias,
+                                 residual=residual, activation=activation,
+                                 backend=backend)
     else:
         raise ValueError(spec.kind)
-    if spec.bias:
-        y = y + params["b"].astype(compute_dtype)
     return y
 
 
@@ -351,23 +368,29 @@ def init_mlp(key, specs: dict[str, LinearSpec], param_dtype):
     return {nm: init_linear(k, sp, param_dtype) for (nm, sp), k in zip(specs.items(), keys)}
 
 
-def apply_mlp(params, x, specs: dict[str, LinearSpec], cfg: ModelConfig, compute_dtype):
+def apply_mlp(params, x, specs: dict[str, LinearSpec], cfg: ModelConfig, compute_dtype,
+              residual: jax.Array | None = None):
     # TT layers keep activations token-sharded (weights are replicated cores);
     # dense layers use Megatron column/row TP (d_ff over `model`).
+    # The up/gate activation fuses into the projection's epilogue, and
+    # ``residual`` (the block's skip connection) into the down projection's —
+    # the paper's TTDLinear-Res fusion at the MLP-down call site.
     from ..dist.api import BATCH
     tt_down = specs["down"].kind == "tt"
     h_spec = (BATCH, "model", None) if tt_down else (None, None, "model")
     if "gate" in specs:
-        g = apply_linear(params["gate"], x, specs["gate"], compute_dtype)
+        act = "silu" if cfg.act == "swiglu" else "gelu"
+        g = apply_linear(params["gate"], x, specs["gate"], compute_dtype,
+                         activation=act)
         u = apply_linear(params["up"], x, specs["up"], compute_dtype)
-        act = jax.nn.silu if cfg.act == "swiglu" else partial(jax.nn.gelu, approximate=True)
-        h = act(g.astype(jnp.float32)).astype(compute_dtype) * u
+        h = g * u
         h = constrain(h, *h_spec)
-        return apply_linear(params["down"], h, specs["down"], compute_dtype)
-    h = apply_linear(params["up"], x, specs["up"], compute_dtype)
-    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(compute_dtype)
+        return apply_linear(params["down"], h, specs["down"], compute_dtype,
+                            residual=residual)
+    h = apply_linear(params["up"], x, specs["up"], compute_dtype, activation="gelu")
     h = constrain(h, *h_spec)
-    return apply_linear(params["down"], h, specs["down"], compute_dtype)
+    return apply_linear(params["down"], h, specs["down"], compute_dtype,
+                        residual=residual)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,11 @@ Three execution paths, picked statically from shapes/mesh:
 Expert weights may be TT-compressed (paper technique applied to experts —
 the dominant parameter mass in MoE archs; cores stay replicated over data,
 sharded over model on the expert dim only).
+
+Expert FFNs route through the unified linear dispatch (``apply_mlp`` fuses
+the up/gate activation into the projection epilogue); the block residual is
+NOT fused here — the gated combine multiplies each expert's output before
+the skip connection, so the add happens after combining in the caller.
 """
 from __future__ import annotations
 

@@ -212,9 +212,11 @@ def _wkv_chunked(r, k, v, w, u, state0, chunk=WKV_CHUNK):
     return y.reshape(b, s, h, hd), state
 
 
-def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype):
+def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
+             residual=None):
     """x: (B,S,D); x_prev: (B,1,D) last token of previous chunk (zeros at t=0);
-    state0: (B,H,hd,hd).  Returns (y, last_x, new_state).
+    state0: (B,H,hd,hd).  Returns (y, last_x, new_state).  ``residual`` (the
+    block skip) fuses into the out-projection's epilogue (TTDLinear-Res).
 
     The wkv recurrence scans over time, so the seq dim must be LOCAL during
     the scan; r/k/v/w are resharded seq→heads around it (batch-only
@@ -245,17 +247,20 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype):
     y = constrain(y, BATCH, None, None)  # reverse hops for the TT out-proj
     y = constrain(y, BATCH, "model", None)
     y = y * g.astype(compute_dtype)  # gate is token-sharded; multiply after hop
-    y = apply_linear(p["tm"]["o"], y, specs["tm"]["o"], compute_dtype)
+    y = apply_linear(p["tm"]["o"], y, specs["tm"]["o"], compute_dtype,
+                     residual=residual)
     return y, x[:, -1:], state
 
 
 def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype):
+    # relu² rides the key projection's fused epilogue; the residual can't
+    # fuse into cm_value because the r-gate multiplies its output first.
     shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
     xx = shifted - x
     xk = x + xx * p["mu_cm_k"].astype(compute_dtype)
     xr = x + xx * p["mu_cm_r"].astype(compute_dtype)
-    k = apply_linear(p["cm"]["k"], xk, specs["cm"]["k"], compute_dtype)
-    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(compute_dtype)
+    k = apply_linear(p["cm"]["k"], xk, specs["cm"]["k"], compute_dtype,
+                     activation="relu2")
     if specs["cm"]["v"].kind == "tt":
         k = constrain(k, BATCH, "model", None)
     else:
@@ -271,9 +276,9 @@ def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype):
 def apply_block(p, specs, cfg: ModelConfig, x, state, compute_dtype):
     """state: {"wkv": (B,H,hd,hd), "x_tm": (B,1,D), "x_cm": (B,1,D)}."""
     h = apply_norm(p["ln1"], x, cfg)
-    y, last_tm, wkv = time_mix(p, specs, cfg, h, state["x_tm"], state["wkv"], compute_dtype)
-    x = x + y.astype(x.dtype)
-    x = constrain(x, BATCH, None, None)
+    y, last_tm, wkv = time_mix(p, specs, cfg, h, state["x_tm"], state["wkv"],
+                               compute_dtype, residual=x)
+    x = constrain(y.astype(x.dtype), BATCH, None, None)
     h = apply_norm(p["ln2"], x, cfg)
     y, last_cm = channel_mix(p, specs, cfg, h, state["x_cm"], compute_dtype)
     x = x + y.astype(x.dtype)

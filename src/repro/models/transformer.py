@@ -140,8 +140,12 @@ def _qkv(params, specs: BlockSpecs, cfg: ModelConfig, x, rope_cs, compute_dtype)
 
 
 def attn_full(params, specs, cfg: ModelConfig, x, rope_cs, compute_dtype,
-              *, return_kv=False):
-    """Self-attention over the whole sequence (train / prefill)."""
+              *, return_kv=False, residual=None):
+    """Self-attention over the whole sequence (train / prefill).
+
+    ``residual`` (the block's skip connection) fuses into the output
+    projection's epilogue — the paper's TTDLinear-Res at the attn-out site.
+    """
     b, s, _ = x.shape
     q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
     pos = jnp.arange(s, dtype=jnp.int32)
@@ -152,12 +156,13 @@ def attn_full(params, specs, cfg: ModelConfig, x, rope_cs, compute_dtype,
     if specs.attn_d()["wo"].kind == "tt":
         # SP boundary: heads→seq reshard so the TT segment stays token-sharded
         o = constrain(o, BATCH, "model", None)
-    o = apply_linear(params["attn"]["wo"], o, specs.attn_d()["wo"], compute_dtype)
+    o = apply_linear(params["attn"]["wo"], o, specs.attn_d()["wo"], compute_dtype,
+                     residual=residual)
     return (o, (k, v)) if return_kv else (o, None)
 
 
 def attn_decode(params, specs, cfg: ModelConfig, x, rope_cs, cache, pos,
-                compute_dtype):
+                compute_dtype, residual=None):
     """One-token decode against a (ring) KV cache.
 
     cache: {"k": (B, W, Hkv, Dh), "v": ..., "pos": (W,) int32, -1 = empty}.
@@ -176,7 +181,7 @@ def attn_decode(params, specs, cfg: ModelConfig, x, rope_cs, cache, pos,
                         causal=True, window=cfg.window)
     o = constrain(o, BATCH, None, "model", None)
     o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
-                     specs.attn_d()["wo"], compute_dtype)
+                     specs.attn_d()["wo"], compute_dtype, residual=residual)
     return o, {"k": k_new, "v": v_new, "pos": pos_new}
 
 
@@ -187,19 +192,22 @@ def apply_block(params, specs: BlockSpecs, cfg: ModelConfig, x, rope_cs,
                 compute_dtype, cache=None, pos=None):
     h = apply_norm(params["ln1"], x, cfg)
     if cache is None:
-        a, _ = attn_full(params, specs, cfg, h, rope_cs, compute_dtype)
+        a, _ = attn_full(params, specs, cfg, h, rope_cs, compute_dtype, residual=x)
         new_cache = None
     else:
-        a, new_cache = attn_decode(params, specs, cfg, h, rope_cs, cache, pos, compute_dtype)
-    x = x + a.astype(x.dtype)
-    x = constrain(x, BATCH, "model", None)
+        a, new_cache = attn_decode(params, specs, cfg, h, rope_cs, cache, pos,
+                                   compute_dtype, residual=x)
+    x = constrain(a.astype(x.dtype), BATCH, "model", None)
     h = apply_norm(params["ln2"], x, cfg)
     if specs.moe is not None:
+        # MoE combine is gated per token-expert pair — the skip connection
+        # can't ride a single linear's epilogue; added after the combine.
         m, aux = apply_moe(params["moe"], h, specs.moe, cfg, compute_dtype)
+        x = x + m.astype(x.dtype)
     else:
-        m = apply_mlp(params["mlp"], h, specs.mlp_d(), cfg, compute_dtype)
+        x = apply_mlp(params["mlp"], h, specs.mlp_d(), cfg, compute_dtype,
+                      residual=x).astype(x.dtype)
         aux = jnp.zeros((), jnp.float32)
-    x = x + m.astype(x.dtype)
     x = constrain(x, BATCH, "model", None)
     return x, new_cache, aux
 
@@ -314,14 +322,15 @@ def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bf
         def body(carry, layer_params, specs=specs):
             h = apply_norm(layer_params["ln1"], carry, cfg)
             a, kv = attn_full(layer_params, specs, cfg, h, rope_cs, compute_dtype,
-                              return_kv=True)
-            y = carry + a.astype(carry.dtype)
+                              return_kv=True, residual=carry)
+            y = a.astype(carry.dtype)
             h2 = apply_norm(layer_params["ln2"], y, cfg)
             if specs.moe is not None:
                 m, _ = apply_moe(layer_params["moe"], h2, specs.moe, cfg, compute_dtype)
+                y = y + m.astype(y.dtype)
             else:
-                m = apply_mlp(layer_params["mlp"], h2, specs.mlp_d(), cfg, compute_dtype)
-            y = y + m.astype(y.dtype)
+                y = apply_mlp(layer_params["mlp"], h2, specs.mlp_d(), cfg,
+                              compute_dtype, residual=y).astype(y.dtype)
             y = constrain(y, BATCH, "model", None)
             k, v = kv
             w = min(cfg.window, max_len) if cfg.window else max_len

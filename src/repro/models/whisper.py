@@ -92,8 +92,10 @@ def _heads(cfg, t):
 
 
 def _mha(params, specs, cfg, xq, xkv, *, causal, compute_dtype, cache=None, pos=None,
-         q_block=1024, kv_block=1024):
-    """Generic MHA: self (xq is xkv) or cross.  Optional decode ring cache."""
+         q_block=1024, kv_block=1024, residual=None):
+    """Generic MHA: self (xq is xkv) or cross.  Optional decode ring cache.
+
+    ``residual`` fuses into the wo projection's epilogue (TTDLinear-Res)."""
     q = _heads(cfg, apply_linear(params["wq"], xq, specs["wq"], compute_dtype))
     if cache is not None and "k" in cache and xkv is None:
         # cross-attention decode: fixed precomputed K/V
@@ -126,7 +128,8 @@ def _mha(params, specs, cfg, xq, xkv, *, causal, compute_dtype, cache=None, pos=
     o = o.reshape(b, s, cfg.q_dim)
     if specs["wo"].kind == "tt":
         o = constrain(o, BATCH, "model", None)
-    y = apply_linear(params["wo"], o, specs["wo"], compute_dtype)
+    y = apply_linear(params["wo"], o, specs["wo"], compute_dtype,
+                     residual=residual)
     return y, new_cache
 
 
@@ -142,10 +145,12 @@ def encode(params, cfg: ModelConfig, enc_frames, compute_dtype, remat="none"):
 
     def body(carry, p):
         h = apply_norm(p["ln1"], carry, cfg)
-        a, _ = _mha(p["attn"], aspecs, cfg, h, h, causal=False, compute_dtype=compute_dtype)
-        y = carry + a.astype(carry.dtype)
+        a, _ = _mha(p["attn"], aspecs, cfg, h, h, causal=False,
+                    compute_dtype=compute_dtype, residual=carry)
+        y = a.astype(carry.dtype)
         h = apply_norm(p["ln2"], y, cfg)
-        y = y + apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype).astype(y.dtype)
+        y = apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype,
+                      residual=y).astype(y.dtype)
         return constrain(y, BATCH, "model", None), None
 
     f = remat_wrap(body, remat)
@@ -164,13 +169,15 @@ def decode_stack(params, cfg: ModelConfig, tokens, enc_out, compute_dtype, remat
     def body(carry, p):
         h = apply_norm(p["ln1"], carry, cfg)
         a, _ = _mha(p["attn"], aspecs, cfg, h, h, causal=True, compute_dtype=compute_dtype,
-                    q_block=cfg.q_block, kv_block=cfg.kv_block)
-        y = carry + a.astype(carry.dtype)
+                    q_block=cfg.q_block, kv_block=cfg.kv_block, residual=carry)
+        y = a.astype(carry.dtype)
         h = apply_norm(p["ln_x"], y, cfg)
-        a, _ = _mha(p["xattn"], aspecs, cfg, h, enc_out, causal=False, compute_dtype=compute_dtype)
-        y = y + a.astype(y.dtype)
+        a, _ = _mha(p["xattn"], aspecs, cfg, h, enc_out, causal=False,
+                    compute_dtype=compute_dtype, residual=y)
+        y = a.astype(y.dtype)
         h = apply_norm(p["ln2"], y, cfg)
-        y = y + apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype).astype(y.dtype)
+        y = apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype,
+                      residual=y).astype(y.dtype)
         return constrain(y, BATCH, "model", None), None
 
     f = remat_wrap(body, remat)
@@ -226,13 +233,16 @@ def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bf
 
     def body(carry, p):
         h = apply_norm(p["ln1"], carry, cfg)
-        a, kv = _mha(p["attn"], aspecs, cfg, h, h, causal=True, compute_dtype=compute_dtype)
-        y = carry + a.astype(carry.dtype)
+        a, kv = _mha(p["attn"], aspecs, cfg, h, h, causal=True,
+                     compute_dtype=compute_dtype, residual=carry)
+        y = a.astype(carry.dtype)
         h = apply_norm(p["ln_x"], y, cfg)
-        a, xkv = _mha(p["xattn"], aspecs, cfg, h, enc_out, causal=False, compute_dtype=compute_dtype)
-        y = y + a.astype(y.dtype)
+        a, xkv = _mha(p["xattn"], aspecs, cfg, h, enc_out, causal=False,
+                      compute_dtype=compute_dtype, residual=y)
+        y = a.astype(y.dtype)
         h = apply_norm(p["ln2"], y, cfg)
-        y = y + apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype).astype(y.dtype)
+        y = apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype,
+                      residual=y).astype(y.dtype)
         k, v = kv
         k_c, v_c, pos_c = _ring_from_prefill(k, v, s, max_len, cache_dtype)
         # cross K/V from encoder projections (recompute once here, store)
@@ -259,14 +269,15 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, positions=None):
         p, c_self, c_cross = xs
         h = apply_norm(p["ln1"], carry, cfg)
         a, ns = _mha(p["attn"], aspecs, cfg, h, h, causal=True, compute_dtype=compute_dtype,
-                     cache=c_self, pos=pos)
-        y = carry + a.astype(carry.dtype)
+                     cache=c_self, pos=pos, residual=carry)
+        y = a.astype(carry.dtype)
         h = apply_norm(p["ln_x"], y, cfg)
         a, _ = _mha(p["xattn"], aspecs, cfg, h, None, causal=False, compute_dtype=compute_dtype,
-                    cache=c_cross, pos=pos)
-        y = y + a.astype(y.dtype)
+                    cache=c_cross, pos=pos, residual=y)
+        y = a.astype(y.dtype)
         h = apply_norm(p["ln2"], y, cfg)
-        y = y + apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype).astype(y.dtype)
+        y = apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype,
+                      residual=y).astype(y.dtype)
         return y, ns
 
     x, new_self = jax.lax.scan(body, x, (params["dec_blocks"], caches["self"], caches["cross"]))

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..config import ModelConfig
+from ..kernels.dispatch import backend_override
 from ..models.api import Model
 
 
@@ -40,13 +41,19 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
-                 cache_dtype=jnp.float32, greedy: bool = True):
+                 cache_dtype=jnp.float32, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0, seed: int = 0,
+                 kernel_backend: str | None = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.greedy = greedy
+        self.temperature = temperature
+        self.top_k = top_k
+        self._key = jax.random.PRNGKey(seed)
+        self.kernel_backend = kernel_backend  # None -> dispatch policy chain
         self.cache = model.init_cache(slots, max_len, cache_dtype)
         # identify each cache leaf's batch axis structurally (dim sizes like
         # n_layers can collide with the slot count)
@@ -60,11 +67,19 @@ class Engine:
         self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
         self.queue: list[Request] = []
         self.finished: list[Request] = []
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_dtype=cache_dtype,
-                                       max_len=max_len))
-        self._decode = jax.jit(
-            lambda p, c, b, pos: model.decode_step(p, c, b, pos))
+        # backend resolves at trace time — pin the engine's choice (if any)
+        # for both jitted programs so prefill/decode exercise the same path
+        def _prefill_fn(p, b):
+            with backend_override(kernel_backend):
+                return model.prefill(p, b, cache_dtype=cache_dtype,
+                                     max_len=max_len)
+
+        def _decode_fn(p, c, b, pos):
+            with backend_override(kernel_backend):
+                return model.decode_step(p, c, b, pos)
+
+        self._prefill = jax.jit(_prefill_fn)
+        self._decode = jax.jit(_decode_fn)
         self._next_rid = 0
 
     # -- public API -----------------------------------------------------------
@@ -174,4 +189,13 @@ class Engine:
                     self.slot_req[s] = None
 
     def _sample(self, logits) -> int:
-        return int(jnp.argmax(logits))
+        """Greedy argmax, or seeded temperature/top-k sampling."""
+        if self.greedy:
+            return int(jnp.argmax(logits))
+        self._key, sub = jax.random.split(self._key)
+        scaled = logits.astype(jnp.float32) / max(self.temperature, 1e-6)
+        if self.top_k > 0:
+            k = min(self.top_k, scaled.shape[-1])
+            kth = jax.lax.top_k(scaled, k)[0][-1]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return int(jax.random.categorical(sub, scaled))

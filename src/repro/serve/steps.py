@@ -16,10 +16,18 @@ from jax.sharding import PartitionSpec as P
 from ..config import ModelConfig, QuantConfig
 
 
-def serve_config_of(cfg: ModelConfig) -> ModelConfig:
-    """Training config -> serving config (int4 weights for non-TT linears)."""
-    return cfg.replace(quant=QuantConfig(enabled=True, bits=4, group_size=128),
-                       param_dtype="bfloat16")
+def serve_config_of(cfg: ModelConfig, kernel_backend: str | None = None) -> ModelConfig:
+    """Training config -> serving config (int4 weights for non-TT linears).
+
+    ``kernel_backend`` pins the linear dispatch backend for the serve path
+    (default: keep the config's policy — "auto" picks Pallas on TPU); see
+    ``repro.kernels.dispatch``.
+    """
+    cfg = cfg.replace(quant=QuantConfig(enabled=True, bits=4, group_size=128),
+                      param_dtype="bfloat16")
+    if kernel_backend is not None:
+        cfg = cfg.replace(kernel_backend=kernel_backend)
+    return cfg
 
 
 def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):

@@ -51,6 +51,32 @@ def test_tt_kernel_fused_bn_res_epilogue(key):
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-5)
 
 
+def test_tt_kernel_bias_only_epilogue(key):
+    """bias without scale must still be applied in-kernel (regression: the
+    old epilogue only handled bias through the "bn" branch)."""
+    spec = TTSpec.make(256, 512, 8, d=4)
+    cores = init_tt_linear(key, spec, jnp.float32)["cores"]
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (10, 256))
+    bi = jax.random.normal(k2, (512,))
+    y_k = tt_linear_pallas(x, cores, spec, bias=bi, interpret=True)
+    y_r = ref.tt_linear_bn_res(x, cores, spec, bias=bi)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-5)
+    # and the bias really landed (vs the silently-dropped behaviour)
+    y_no = tt_linear_pallas(x, cores, spec, interpret=True)
+    assert float(jnp.max(jnp.abs(y_k - (y_no + bi)))) < 1e-5
+    assert float(jnp.max(jnp.abs(y_k - y_no))) > 1e-3
+
+
+def test_tt_kernel_fused_activation(key):
+    spec = TTSpec.make(256, 512, 8, d=4)
+    cores = init_tt_linear(key, spec, jnp.float32)["cores"]
+    x = jax.random.normal(key, (6, 256))
+    y_k = tt_linear_pallas(x, cores, spec, activation="gelu", interpret=True)
+    y_r = ref.tt_linear_bn_res(x, cores, spec, activation="gelu")
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-5)
+
+
 def test_tt_kernel_block_picker():
     spec = TTSpec.make(4096, 13696, 16, in_modes=(8, 8, 8, 8), out_modes=(4, 4, 8, 107))
     bb = pick_block_b(spec, 1024)
@@ -112,3 +138,26 @@ def test_int4_kernel_matches_ref(b, k, m, g, dtype, key):
     scale = float(jnp.max(jnp.abs(y_r.astype(jnp.float32)))) or 1.0
     err = float(jnp.max(jnp.abs(y_k.astype(jnp.float32) - y_r.astype(jnp.float32))))
     assert err / scale < 2e-2
+
+
+@pytest.mark.parametrize("b,k,m,use_scale", [
+    (7, 256, 130, False),   # padded batch AND padded out-features
+    (16, 256, 128, True),
+])
+def test_int4_kernel_fused_epilogue(b, k, m, use_scale, key):
+    """int4 kernel's bias(/scale)+residual epilogue vs the oracle, including
+    m-padding where epilogue columns must be padded alongside qweight."""
+    g = 64
+    w = np.random.randn(m, k).astype(np.float32)
+    q = quantize_int4(w, g)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (b, k), jnp.float32)
+    sc = jax.random.normal(k2, (m,)) if use_scale else None
+    bi = jax.random.normal(k3, (m,))
+    res = jax.random.normal(k4, (b, m))
+    y_k = int4_matmul_pallas(x, q["qweight"], q["scales"], group=g, scale=sc,
+                             bias=bi, residual=res, interpret=True)
+    y_r = ref.int4_matmul(x, q["qweight"], q["scales"], group=g, scale=sc,
+                          bias=bi, residual=res)
+    assert y_k.shape == (b, m)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-4, atol=1e-4)
