@@ -43,6 +43,7 @@ from ..core.ttd import TTSpec
 from . import ref
 from .epilogue import apply_epilogue
 from .int4_matmul import int4_matmul_pallas
+from .paged_attention import paged_attention_pallas
 from .tt_linear import tt_linear_pallas
 
 BACKENDS = ("ref", "pallas-interpret", "pallas")
@@ -129,6 +130,25 @@ def tt_linear(x, cores, spec: TTSpec, *, scale=None, bias=None, residual=None,
                          activation=activation, block_b=block_b,
                          interpret=(backend == "pallas-interpret"))
     return y.reshape(*lead, spec.n_out)
+
+
+def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,
+                    backend: str | None = None, role: str = "attn_paged"):
+    """Decode attention through a paged KV cache's block table.
+
+    q: (B, H, Dh) — one query token per sequence; qpos: (B,) absolute
+    positions (-1 = inactive row → zeros).  ``ref`` gathers the context and
+    runs the masked-softmax oracle; the Pallas backends run the fused
+    online-softmax kernel (``kernels/paged_attention.py``).  Chunked prefill
+    (Sq > 1) always uses the ref math — see ``kernels/ref.py``.
+    """
+    backend = resolve_backend(backend, role=role)
+    if backend == "ref":
+        return ref.paged_attention(q[:, None], cache, block_tables,
+                                   qpos[:, None], sm_scale=sm_scale)[:, 0]
+    return paged_attention_pallas(q, cache, block_tables, qpos,
+                                  sm_scale=sm_scale,
+                                  interpret=(backend == "pallas-interpret"))
 
 
 def int4_matmul(x, qweight, scales, *, group: int = 128, scale=None, bias=None,

@@ -1,0 +1,123 @@
+"""Paged decode-attention Pallas kernel (one query token per sequence).
+
+Serving decode is the shape the paper optimizes first-token-onward latency
+for: every active sequence contributes exactly one query token per tick, and
+its K/V context lives scattered across fixed-size blocks owned via a block
+table (see ``serve/kv_cache.py``).  This kernel fuses the whole per-sequence
+attention — block-table indirection, optional int8 dequant, online softmax,
+GQA head grouping — into a single pass, so decode never materializes a
+gathered (B, S, Hkv, Dh) context in HBM the way the pure-JAX reference
+(``kernels/ref.py::paged_attention``) does.
+
+Grid: one program per sequence.  The program walks only the blocks its
+sequence actually occupies (``fori_loop`` with a data-dependent trip count),
+streaming one (block_size, Hkv, Dh) K/V tile at a time through the flash
+online-softmax recurrence; the running (m, l, acc) state is O(heads) and the
+ragged last block / empty sequence cases fall out of the position mask.
+
+The K/V pools are handed to the kernel whole (index-mapped to block (0,…))
+and sliced per block id with ``pl.ds`` — correct under the interpreter and
+for Mosaic as long as the pool fits VMEM.  A production TPU build would
+instead prefetch the block table as a scalar argument
+(``pltpu.PrefetchScalarGridSpec``) and let the BlockSpec index_map DMA one
+block per grid step from HBM; that variant changes only this file, not the
+dispatch contract.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, bt_ref, qpos_ref, k_ref, v_ref, *refs,
+            block_size: int, n_kv_heads: int, sm_scale: float,
+            quantized: bool, out_dtype):
+    out_ref = refs[-1]
+    ks_ref, vs_ref = (refs[0], refs[1]) if quantized else (None, None)
+    q = q_ref[0]  # (H, Dh)
+    h, dh = q.shape
+    g = h // n_kv_heads
+    qh = q.reshape(n_kv_heads, g, dh).astype(jnp.float32) * sm_scale
+    qpos = qpos_ref[0]  # scalar int32; -1 = inactive sequence
+    n_blocks = (jnp.maximum(qpos + 1, 0) + block_size - 1) // block_size
+
+    def body(j, carry):
+        m, l, acc = carry
+        blk = bt_ref[0, j]
+        kb = k_ref[pl.ds(blk, 1)][0].astype(jnp.float32)  # (BS, Hkv, Dh)
+        vb = v_ref[pl.ds(blk, 1)][0].astype(jnp.float32)
+        if quantized:
+            kb = kb * ks_ref[pl.ds(blk, 1)][0][..., None]
+            vb = vb * vs_ref[pl.ds(blk, 1)][0][..., None]
+        s = jnp.einsum("hgd,khd->hgk", qh, kb)  # (Hkv, G, BS)
+        kpos = j * block_size + jnp.arange(block_size, dtype=jnp.int32)
+        valid = kpos <= qpos  # causal + ragged-last-block mask
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None]) * valid[None, None, :]
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("hgk,khd->hgd", p, vb)
+        acc_new = acc * corr[..., None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((n_kv_heads, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_kv_heads, g), jnp.float32)
+    a0 = jnp.zeros((n_kv_heads, g, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+    out_ref[0] = out.reshape(h, dh).astype(out_dtype)
+
+
+def paged_attention_pallas(q: jax.Array, cache: dict, block_tables: jax.Array,
+                           qpos: jax.Array, *, sm_scale: float | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """Decode attention through a block table; one query token per sequence.
+
+    q: (B, H, Dh); cache: ``{"k","v": (NB, BS, Hkv, Dh)}`` plus
+    ``k_scale``/``v_scale`` ``(NB, BS, Hkv)`` when the cache dtype is int8;
+    block_tables: (B, W) int32; qpos: (B,) int32 absolute position of each
+    new token (its K/V already written), ``-1`` for inactive rows (output
+    zeros).  Returns (B, H, Dh) in ``q.dtype``.
+
+    ``interpret`` defaults True like the other ``*_pallas`` kernels (this
+    repo's tests run on CPU); production callers go through
+    ``kernels.dispatch.paged_attention``, which sets it from the backend
+    policy (``pallas`` → compiled via Mosaic).
+    """
+    b, h, dh = q.shape
+    nb, bs, hkv, _ = cache["k"].shape
+    w = block_tables.shape[1]
+    quantized = "k_scale" in cache
+    sm_scale = sm_scale or (1.0 / math.sqrt(dh))
+
+    in_specs = [
+        pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+        pl.BlockSpec((1, w), lambda i: (i, 0)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((nb, bs, hkv, dh), lambda i: (0, 0, 0, 0)),
+        pl.BlockSpec((nb, bs, hkv, dh), lambda i: (0, 0, 0, 0)),
+    ]
+    args = [q, block_tables.astype(jnp.int32), qpos.astype(jnp.int32),
+            cache["k"], cache["v"]]
+    if quantized:
+        for nm in ("k_scale", "v_scale"):
+            in_specs.append(pl.BlockSpec((nb, bs, hkv), lambda i: (0, 0, 0)))
+            args.append(cache[nm].astype(jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_size=bs, n_kv_heads=hkv,
+                          sm_scale=sm_scale, quantized=quantized,
+                          out_dtype=q.dtype),
+        grid=(b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(*args)

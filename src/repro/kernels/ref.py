@@ -9,6 +9,8 @@ Two independent references for the TT kernel:
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +36,58 @@ def tt_linear_bn_res(x, cores, spec, scale=None, bias=None, residual=None,
     y = apply_epilogue(y, scale=scale, bias=bias, residual=residual,
                        activation=activation)
     return y.astype(x.dtype)
+
+
+NEG_INF = -1e30
+
+
+def gather_paged_kv(cache: dict, block_tables: jax.Array):
+    """Gather a sequence-major K/V view out of the paged block pool.
+
+    cache: ``{"k","v": (NB, BS, Hkv, Dh)}`` (+ ``k_scale``/``v_scale``
+    ``(NB, BS, Hkv)`` for the int8 cache dtype, dequantized here);
+    block_tables: (B, W) int32 ordered logical→physical block ids.
+    Returns k, v of shape (B, W*BS, Hkv, Dh) in f32, where gathered index
+    ``i`` holds the sequence's absolute position ``i``.
+    """
+    k = cache["k"][block_tables].astype(jnp.float32)  # (B, W, BS, Hkv, Dh)
+    v = cache["v"][block_tables].astype(jnp.float32)
+    if "k_scale" in cache:
+        k = k * cache["k_scale"][block_tables][..., None]
+        v = v * cache["v_scale"][block_tables][..., None]
+    b, w, bs, hkv, dh = k.shape
+    return k.reshape(b, w * bs, hkv, dh), v.reshape(b, w * bs, hkv, dh)
+
+
+def paged_attention(q: jax.Array, cache: dict, block_tables: jax.Array,
+                    qpos: jax.Array, *, sm_scale: float | None = None) -> jax.Array:
+    """Causal attention of per-sequence queries against a paged KV cache.
+
+    q: (B, Sq, H, Dh) — Sq == 1 is the decode shape, Sq > 1 a prefill chunk.
+    qpos: (B, Sq) absolute position of each query token; ``-1`` marks
+    padding (output zeros).  Query ``p`` attends to cache positions
+    ``0..p`` inclusive (the current token's K/V must already be written).
+    Per-sequence masking makes this the oracle for ragged decode batches —
+    unlike ``models.modules.attention_dense`` whose positions are shared
+    across the batch.
+    """
+    b, sq, h, dh = q.shape
+    hkv = cache["k"].shape[2]
+    g = h // hkv
+    sm_scale = sm_scale or (1.0 / math.sqrt(dh))
+    k, v = gather_paged_kv(cache, block_tables)  # (B, K, Hkv, Dh) f32
+    qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k) * sm_scale
+    kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
+    mask = (kpos[None, None, :] <= qpos[:, :, None]) & (qpos >= 0)[:, :, None]
+    maskb = mask[:, None, None]  # (B, 1, 1, Sq, K)
+    s = jnp.where(maskb, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * maskb  # masked rows: exp(0)=1 zeroed by the mask
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
 
 
 def int4_matmul(x: jax.Array, qweight: jax.Array, scales: jax.Array,

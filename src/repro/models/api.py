@@ -27,6 +27,12 @@ class Model:
     init_cache: Callable[..., Any]
     prefill: Callable[..., tuple[jax.Array, Any]]
     decode_step: Callable[..., tuple[jax.Array, Any]]
+    # paged-KV serving path (DESIGN.md §6) — attention families only; None
+    # for the stateful recurrences (griffin/rwkv) and enc-dec, whose ring /
+    # state caches are already O(1) per token.
+    init_paged_cache: Callable[..., Any] | None = None
+    prefill_paged_chunk: Callable[..., tuple[jax.Array, Any]] | None = None
+    decode_step_paged: Callable[..., tuple[jax.Array, Any]] | None = None
 
 
 def _lm_adapter(mod, cfg: ModelConfig) -> Model:
@@ -43,6 +49,18 @@ def _lm_adapter(mod, cfg: ModelConfig) -> Model:
         return mod.decode_step(params, cfg, cache, batch["tokens"], pos,
                                positions=batch.get("positions"))
 
+    paged = {}
+    if hasattr(mod, "init_paged_cache"):
+        paged = dict(
+            init_paged_cache=lambda num_blocks, block_size, dtype=jnp.bfloat16:
+                mod.init_paged_cache(cfg, num_blocks, block_size, dtype),
+            prefill_paged_chunk=lambda params, caches, batch, bt, positions:
+                mod.prefill_paged_chunk(params, cfg, caches, batch["tokens"],
+                                        bt, positions),
+            decode_step_paged=lambda params, caches, batch, bt, positions:
+                mod.decode_step_paged(params, cfg, caches, batch["tokens"],
+                                      bt, positions),
+        )
     return Model(
         cfg=cfg,
         init=lambda key: mod.init_lm(key, cfg),
@@ -51,6 +69,7 @@ def _lm_adapter(mod, cfg: ModelConfig) -> Model:
         init_cache=lambda batch, max_len, dtype=jnp.bfloat16: mod.init_cache(cfg, batch, max_len, dtype),
         prefill=prefill_fn,
         decode_step=decode_fn,
+        **paged,
     )
 
 

@@ -345,6 +345,43 @@ def flash_attention(q, k, v, *, qpos, kpos, kmask=None, causal=True, window=0,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV-cache write (serve path; see serve/kv_cache.py for the layout)
+# ---------------------------------------------------------------------------
+def paged_kv_update(cache: dict, k_new, v_new, block_tables, positions):
+    """Scatter one chunk of fresh K/V into paged blocks via the block table.
+
+    cache: ``{"k","v": (NB, BS, Hkv, Dh)}`` (+ ``k_scale``/``v_scale``
+    ``(NB, BS, Hkv)`` f32 for the int8 cache dtype — each written token gets
+    a per-(block-slot, head) scale, so dequantization is exact up to the
+    int8 rounding of the values themselves).
+    k_new/v_new: (B, S, Hkv, Dh); block_tables: (B, W) int32;
+    positions: (B, S) int32 absolute token positions, ``-1`` = padding
+    (routed to the reserved null block 0, never owned by a live sequence).
+    """
+    b, s, hkv, dh = k_new.shape
+    bs = cache["k"].shape[1]
+    valid = positions >= 0
+    safe = jnp.maximum(positions, 0)
+    idx = jnp.clip(safe // bs, 0, block_tables.shape[1] - 1)
+    rows = jnp.where(valid, jnp.take_along_axis(block_tables, idx, axis=1), 0)
+    slots = jnp.where(valid, safe % bs, 0)
+    rf, sf = rows.reshape(-1), slots.reshape(-1)
+    out = dict(cache)
+    for nm, x in (("k", k_new), ("v", v_new)):
+        buf = cache[nm]
+        if nm + "_scale" in cache:
+            x32 = x.astype(jnp.float32)
+            sc = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8) / 127.0
+            q = jnp.round(x32 / sc[..., None]).astype(jnp.int8)
+            out[nm] = buf.at[rf, sf].set(q.reshape(-1, hkv, dh))
+            out[nm + "_scale"] = cache[nm + "_scale"].at[rf, sf].set(
+                sc.reshape(-1, hkv))
+        else:
+            out[nm] = buf.at[rf, sf].set(x.astype(buf.dtype).reshape(-1, hkv, dh))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # MLP variants
 # ---------------------------------------------------------------------------
 def mlp_specs(cfg: ModelConfig, ttd_block: bool, d_in: int | None = None,

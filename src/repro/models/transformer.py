@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from ..config import ModelConfig
 from ..dist import constrain
 from ..dist.api import BATCH
+from ..kernels import dispatch
+from ..kernels import ref as kernels_ref
 from .modules import (
     LinearSpec,
     apply_linear,
@@ -38,6 +40,7 @@ from .modules import (
     init_norm,
     linear_spec,
     mlp_specs,
+    paged_kv_update,
     remat_wrap,
     rope_angles,
     stack_init,
@@ -183,6 +186,31 @@ def attn_decode(params, specs, cfg: ModelConfig, x, rope_cs, cache, pos,
     o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
                      specs.attn_d()["wo"], compute_dtype, residual=residual)
     return o, {"k": k_new, "v": v_new, "pos": pos_new}
+
+
+def attn_paged(params, specs, cfg: ModelConfig, x, rope_cs, cache, block_tables,
+               positions, compute_dtype, residual=None):
+    """Attention against a paged KV cache (serve path; DESIGN.md §6).
+
+    cache: one layer's ``{"k","v"[, "k_scale","v_scale"]}`` block pool;
+    positions: (B, S) absolute token positions (``-1`` = padding, routed to
+    the null block and masked out).  S == 1 is the decode shape and runs the
+    fused Pallas kernel via ``kernels.dispatch.paged_attention``; S > 1 is a
+    chunked-prefill step and uses the gather-based oracle math (prefill is
+    matmul-bound — the per-token block walk is a decode optimization).
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
+    new_cache = paged_kv_update(cache, k, v, block_tables, positions)
+    if s == 1:
+        o = dispatch.paged_attention(q[:, 0], new_cache, block_tables,
+                                     positions[:, 0])[:, None]
+    else:
+        o = kernels_ref.paged_attention(q, new_cache, block_tables, positions)
+    o = constrain(o.astype(compute_dtype), BATCH, None, "model", None)
+    o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
+                     specs.attn_d()["wo"], compute_dtype, residual=residual)
+    return o, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -363,6 +391,115 @@ def _ring_from_prefill(k, v, s, w, cache_dtype):
     v_c = jnp.zeros((b, w, hkv, dh), cache_dtype).at[:, slots].set(v_tail)
     pos_c = jnp.zeros((w,), jnp.int32).at[slots].set(tail_pos)
     return k_c, v_c, pos_c
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache serving path (DESIGN.md §6).  Decode takes *per-sequence*
+# positions — ragged batches decode in one call, unlike the ring path whose
+# shared scalar ``pos`` forces the engine to group slots by position.
+# ---------------------------------------------------------------------------
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     cache_dtype=jnp.bfloat16):
+    """Stacked per-layer paged K/V block pools (block 0 = reserved null).
+
+    ``cache_dtype`` may be jnp.int8, in which case per-(block-slot, head)
+    scale tables ride alongside the quantized values.
+    """
+    quantized = cache_dtype == jnp.int8
+
+    def one(n):
+        shape = (n, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+        c = {"k": jnp.zeros(shape, cache_dtype), "v": jnp.zeros(shape, cache_dtype)}
+        if quantized:
+            c["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            c["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        return c
+
+    return [one(n) for n, _ in segment_plan(cfg)]
+
+
+def _paged_rope(cfg: ModelConfig, positions):
+    """Per-sequence rope tables; padding positions (-1) clamp to 0 (their
+    outputs are masked/ignored downstream)."""
+    if cfg.pos_type != "rope":
+        if cfg.pos_type == "none":
+            return None
+        raise NotImplementedError(
+            f"paged serving supports pos_type rope|none, not {cfg.pos_type!r}")
+    return rope_angles(jnp.maximum(positions, 0), cfg.head_dim, cfg.rope_theta,
+                       cfg.partial_rotary)
+
+
+def _paged_body(params, specs, cfg, x, rope_cs, cache, block_tables, positions,
+                compute_dtype):
+    h = apply_norm(params["ln1"], x, cfg)
+    a, new_cache = attn_paged(params, specs, cfg, h, rope_cs, cache,
+                              block_tables, positions, compute_dtype, residual=x)
+    x = constrain(a.astype(x.dtype), BATCH, "model", None)
+    h = apply_norm(params["ln2"], x, cfg)
+    if specs.moe is not None:
+        m, _ = apply_moe(params["moe"], h, specs.moe, cfg, compute_dtype)
+        x = x + m.astype(x.dtype)
+    else:
+        x = apply_mlp(params["mlp"], h, specs.mlp_d(), cfg, compute_dtype,
+                      residual=x).astype(x.dtype)
+    return constrain(x, BATCH, "model", None), new_cache
+
+
+def _paged_stack(params, cfg: ModelConfig, caches, x, rope_cs, block_tables,
+                 positions, compute_dtype):
+    new_caches = []
+    for seg_params, seg_cache, (n, ttd_on) in zip(params["segments"], caches,
+                                                  segment_plan(cfg)):
+        specs = make_block_specs(cfg, ttd_on)
+
+        def body(carry, xs, specs=specs):
+            layer_params, layer_cache = xs
+            return _paged_body(layer_params, specs, cfg, carry, rope_cs,
+                               layer_cache, block_tables, positions,
+                               compute_dtype)
+
+        x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_cache)
+    return apply_norm(params["final_norm"], x, cfg), new_caches
+
+
+def decode_step_paged(params, cfg: ModelConfig, caches, tokens, block_tables,
+                      positions):
+    """One decode tick against the paged cache.
+
+    tokens: (B, 1); positions: (B,) absolute position of each new token
+    (``-1`` = inactive row: its write lands in the null block and its logits
+    are garbage the scheduler ignores).  Returns logits (B, V) f32 and the
+    updated caches.
+    """
+    compute_dtype = dt(cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, None, None)
+    pos2 = positions[:, None].astype(jnp.int32)
+    rope_cs = _paged_rope(cfg, pos2)
+    x, new_caches = _paged_stack(params, cfg, caches, x, rope_cs, block_tables,
+                                 pos2, compute_dtype)
+    return logits_from_hidden(params, cfg, x)[:, 0], new_caches
+
+
+def prefill_paged_chunk(params, cfg: ModelConfig, caches, tokens, block_tables,
+                        positions):
+    """One chunk of batched prefill, writing K/V straight into paged blocks.
+
+    tokens: (B, C); positions: (B, C) absolute positions (``-1`` = padding —
+    prompts shorter than the chunk grid).  Earlier chunks must already be
+    written (the serve driver ``serve.steps.chunked_prefill`` guarantees
+    order).  Returns logits (B, C, V) f32 for *every* chunk position — the
+    driver picks each sequence's last-real-token row — and updated caches.
+    """
+    compute_dtype = dt(cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, "model", None)
+    rope_cs = _paged_rope(cfg, positions.astype(jnp.int32))
+    x, new_caches = _paged_stack(params, cfg, caches, x, rope_cs, block_tables,
+                                 positions.astype(jnp.int32), compute_dtype)
+    return logits_from_hidden(params, cfg, x), new_caches
 
 
 # ---------------------------------------------------------------------------

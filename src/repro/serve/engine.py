@@ -1,29 +1,46 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engines.
 
-A Python scheduler drives two jitted programs (prefill_step, decode_step)
-over a fixed decode batch of ``slots``.  Requests join free slots after
-prefill; every decode tick advances all active slots one token; finished
-sequences (eos or max_tokens) free their slot immediately — classic
-continuous batching (vLLM-style at the scheduling level; the KV layout here
-is per-slot rings rather than paged blocks).
+A Python scheduler drives jitted programs (see ``serve/steps.py``) over a
+fixed decode batch of ``slots``.  Requests join after prefill; every decode
+tick advances all active slots one token; finished sequences (eos or
+max_tokens) free their resources immediately — classic continuous batching.
 
-Single-sequence prefill + slot-wise cache surgery keeps the engine simple
-and correct; a production deployment would batch prefills and use the
-sharded decode_step from launch/dryrun.py (same model functions).
+Two cache disciplines share the scheduler protocol (``submit`` / ``tick`` /
+``run``):
+
+* :class:`Engine` — the per-slot **ring** layout: each slot owns a
+  ``max_len`` ring, prefill is single-sequence with host-side cache surgery,
+  and decode groups slots by position (the jitted decode takes one shared
+  scalar ``pos``).  Simple and correct; kept as the reference
+  implementation the fuzz suite checks the paged engine against.
+* :class:`PagedEngine` — the **paged** layout (DESIGN.md §6): KV memory is a
+  block pool (``serve/kv_cache.py``), admission is block-table-driven
+  (admit while free blocks cover the prompt plus one lookahead token),
+  waiting prompts prefill *batched* in fixed-width chunks, decode is one
+  call per tick regardless of position raggedness (per-sequence positions),
+  and block exhaustion preempts the newest sequence back to the waiting
+  queue (recompute-style: its blocks are freed; emitted tokens are kept and
+  re-prefilled with the prompt on re-admission, so greedy outputs are
+  unchanged).
+
+First-token latency (``Request.t_first``) is stamped only after
+``jax.block_until_ready`` on the prefill logits — timing the dispatch
+instead of the computation understates TTFT by the entire prefill on an
+async backend.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..config import ModelConfig
-from ..kernels.dispatch import backend_override
 from ..models.api import Model
+from . import steps
+from .kv_cache import PagedKVCache, blocks_for
 
 
 @dataclass
@@ -39,74 +56,139 @@ class Request:
     t_done: float = 0.0
 
 
-class Engine:
-    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
-                 cache_dtype=jnp.float32, greedy: bool = True,
+class EngineBase:
+    """Scheduler protocol + sampling shared by both cache disciplines."""
+
+    def __init__(self, model: Model, params, *, greedy: bool = True,
                  temperature: float = 1.0, top_k: int = 0, seed: int = 0,
                  kernel_backend: str | None = None):
         self.model = model
         self.cfg: ModelConfig = model.cfg
         self.params = params
-        self.slots = slots
-        self.max_len = max_len
         self.greedy = greedy
         self.temperature = temperature
         self.top_k = top_k
         self._key = jax.random.PRNGKey(seed)
         self.kernel_backend = kernel_backend  # None -> dispatch policy chain
-        self.cache = model.init_cache(slots, max_len, cache_dtype)
-        # identify each cache leaf's batch axis structurally (dim sizes like
-        # n_layers can collide with the slot count)
-        import jax as _jax
-        sa = _jax.eval_shape(lambda: model.init_cache(slots, max_len, cache_dtype))
-        sb = _jax.eval_shape(lambda: model.init_cache(slots + 1, max_len, cache_dtype))
-        self._batch_axis = _jax.tree.map(
-            lambda a, b: next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
-                               if x != y), -1), sa, sb)
-        self.slot_req: list[Request | None] = [None] * slots
-        self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
         self.queue: list[Request] = []
         self.finished: list[Request] = []
-        # backend resolves at trace time — pin the engine's choice (if any)
-        # for both jitted programs so prefill/decode exercise the same path
-        def _prefill_fn(p, b):
-            with backend_override(kernel_backend):
-                return model.prefill(p, b, cache_dtype=cache_dtype,
-                                     max_len=max_len)
-
-        def _decode_fn(p, c, b, pos):
-            with backend_override(kernel_backend):
-                return model.decode_step(p, c, b, pos)
-
-        self._prefill = jax.jit(_prefill_fn)
-        self._decode = jax.jit(_decode_fn)
         self._next_rid = 0
 
     # -- public API -----------------------------------------------------------
-    def submit(self, prompt: list[int], max_tokens: int = 32, eos: int | None = None) -> Request:
-        req = Request(self._next_rid, list(prompt), max_tokens, eos, t_submit=time.time())
+    def submit(self, prompt: list[int], max_tokens: int = 32,
+               eos: int | None = None) -> Request:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_tokens < 1:
+            raise ValueError("max_tokens must be >= 1")
+        self._validate(prompt, max_tokens)
+        req = Request(self._next_rid, list(prompt), max_tokens, eos,
+                      t_submit=time.time())
         self._next_rid += 1
         self.queue.append(req)
         return req
 
+    def _validate(self, prompt: list[int], max_tokens: int) -> None:
+        """Subclass hook: reject requests that can never be served."""
+
+    def pending(self) -> bool:
+        raise NotImplementedError
+
+    def tick(self) -> None:
+        """One scheduler step: admit waiting requests, then decode one token
+        for every active sequence."""
+        raise NotImplementedError
+
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0
-        while (self.queue or any(r is not None for r in self.slot_req)) and ticks < max_ticks:
-            self._admit()
-            self._decode_tick()
+        while self.pending() and ticks < max_ticks:
+            self.tick()
             ticks += 1
         return self.finished
 
+    # -- shared internals -----------------------------------------------------
+    def _sample(self, logits) -> int:
+        """Greedy argmax, or seeded temperature/top-k sampling."""
+        if self.greedy:
+            return int(jnp.argmax(logits))
+        self._key, sub = jax.random.split(self._key)
+        scaled = logits.astype(jnp.float32) / max(self.temperature, 1e-6)
+        if self.top_k > 0:
+            k = min(self.top_k, scaled.shape[-1])
+            kth = jax.lax.top_k(scaled, k)[0][-1]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        return int(jax.random.categorical(sub, scaled))
+
+    def _emit(self, req: Request, tok: int) -> bool:
+        """Record one sampled token; returns True when the request is done."""
+        req.out_tokens.append(tok)
+        if (req.eos is not None and tok == req.eos) or \
+                len(req.out_tokens) >= req.max_tokens:
+            req.done = True
+            req.t_done = time.time()
+            self.finished.append(req)
+            return True
+        return False
+
+
+class Engine(EngineBase):
+    """Ring-cache engine (single-sequence prefill + slot-wise cache surgery).
+
+    The KV layout is per-slot rings sized ``max_len``; memory is
+    ``slots × max_len`` regardless of live tokens.  Kept as the simple
+    reference the paged engine is fuzz-tested against.
+    """
+
+    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
+                 cache_dtype=jnp.float32, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0, seed: int = 0,
+                 kernel_backend: str | None = None):
+        super().__init__(model, params, greedy=greedy, temperature=temperature,
+                         top_k=top_k, seed=seed, kernel_backend=kernel_backend)
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len, cache_dtype)
+        # identify each cache leaf's batch axis structurally (dim sizes like
+        # n_layers can collide with the slot count)
+        sa = jax.eval_shape(lambda: model.init_cache(slots, max_len, cache_dtype))
+        sb = jax.eval_shape(lambda: model.init_cache(slots + 1, max_len, cache_dtype))
+        self._batch_axis = jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                               if x != y), -1), sa, sb)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
+        self._prefill, self._decode = steps.ring_step_fns(
+            model, steps.canonical_cache_dtype(cache_dtype), max_len,
+            kernel_backend)
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def tick(self) -> None:
+        self._admit()
+        self._decode_tick()
+
     # -- internals ------------------------------------------------------------
+    def _validate(self, prompt: list[int], max_tokens: int) -> None:
+        """The ring holds ``max_len`` positions: a longer prompt would be
+        silently cropped by the slot surgery — reject it up front (mirrors
+        PagedEngine's contract)."""
+        if len(prompt) + 1 > self.max_len:
+            raise ValueError(f"prompt needs {len(prompt) + 1} positions "
+                             f"> max_len {self.max_len}")
+
     def _admit(self):
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
                 toks = jnp.asarray([req.prompt], jnp.int32)
                 logits, cache1 = self._prefill(self.params, {"tokens": toks})
-                tok = self._sample(logits[0])
-                req.out_tokens.append(tok)
+                # first-token latency: stamp only after the device finishes
+                jax.block_until_ready(logits)
                 req.t_first = time.time()
+                tok = self._sample(logits[0])
+                if self._emit(req, tok):  # eos on first token / max_tokens=1
+                    continue
                 self._install(s, cache1, len(req.prompt))
                 self.slot_req[s] = req
                 self.slot_pos[s] = len(req.prompt)
@@ -178,24 +260,190 @@ class Engine:
             for s in slots:
                 req = self.slot_req[s]
                 tok = self._sample(logits[s])
-                req.out_tokens.append(tok)
                 self.slot_pos[s] += 1
-                if (req.eos is not None and tok == req.eos) or \
-                        len(req.out_tokens) >= req.max_tokens or \
-                        self.slot_pos[s] >= self.max_len - 1:
+                if self._emit(req, tok) or self.slot_pos[s] >= self.max_len - 1:
+                    if not req.done:  # ring frontier hit: force-finish
+                        req.done = True
+                        req.t_done = time.time()
+                        self.finished.append(req)
+                    self.slot_req[s] = None
+
+
+class PagedEngine(EngineBase):
+    """Paged-KV continuous batching: block-table admission, batched chunked
+    prefill, single ragged decode call per tick, preempt-to-waiting.
+
+    ``slots`` is the decode batch width; KV memory is ``num_blocks`` blocks
+    of ``block_size`` tokens shared by all sequences (defaults to full
+    occupancy: every slot can reach ``max_len``).  ``cache_dtype`` may be
+    ``"float32" | "bfloat16" | "float16" | "int8"`` (int8 stores
+    per-(block-slot, head) scales alongside the values; see
+    ``models.transformer.init_paged_cache``).
+    """
+
+    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 cache_dtype="float32", prefill_batch: int = 2,
+                 prefill_chunk: int = 32, greedy: bool = True,
+                 temperature: float = 1.0, top_k: int = 0, seed: int = 0,
+                 kernel_backend: str | None = None):
+        super().__init__(model, params, greedy=greedy, temperature=temperature,
+                         top_k=top_k, seed=seed, kernel_backend=kernel_backend)
+        cfg = model.cfg
+        if model.init_paged_cache is None:
+            raise ValueError(f"family {cfg.family!r} has no paged-cache path")
+        if cfg.window:
+            raise NotImplementedError("paged serving assumes full attention "
+                                      "(window=0); use the ring engine for SWA")
+        if cfg.pos_type not in ("rope", "none"):
+            raise NotImplementedError(
+                f"paged serving supports pos_type rope|none, not {cfg.pos_type!r}")
+        self.slots = slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.prefill_batch = max(1, prefill_batch)
+        self.prefill_chunk = max(1, prefill_chunk)
+        if num_blocks is None:
+            num_blocks = 1 + slots * blocks_for(max_len, block_size)
+        dtype_name = steps.canonical_cache_dtype(cache_dtype)
+        self.kv = PagedKVCache(model, num_blocks=num_blocks,
+                               block_size=block_size, max_len=max_len,
+                               cache_dtype=steps.CACHE_DTYPES[dtype_name])
+        self.slot_req: list[Request | None] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
+        self._admit_order: list[int] = []  # slots, oldest admission first
+        self._prefill_chunk, self._decode = steps.paged_step_fns(
+            model, kernel_backend)
+
+    def pending(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
+
+    def tick(self) -> None:
+        self._admit()
+        self._decode_tick()
+
+    @property
+    def num_free_blocks(self) -> int:
+        return self.kv.num_free
+
+    # -- internals ------------------------------------------------------------
+    def _validate(self, prompt: list[int], max_tokens: int) -> None:
+        """A request must be servable *alone* (worst case: everything else
+        preempted): its total token footprint — prompt + generated, capped by
+        the ``max_len`` frontier — must fit the whole pool.  Rejecting at
+        submit keeps mid-run growth failures recoverable by preemption."""
+        if len(prompt) + 1 > self.max_len:
+            raise ValueError(f"prompt needs {len(prompt) + 1} positions "
+                             f"> max_len {self.max_len}")
+        worst = min(len(prompt) + max_tokens, self.max_len)
+        if blocks_for(worst, self.block_size) > self.kv.num_blocks - 1:
+            raise ValueError(
+                f"request needs up to {blocks_for(worst, self.block_size)} "
+                f"blocks but the pool only has {self.kv.num_blocks - 1}")
+    def _seq_tokens(self, req: Request) -> list[int]:
+        """Tokens whose K/V a (re-)admitted request must hold: the prompt
+        plus anything already emitted before a preemption."""
+        return req.prompt + req.out_tokens
+
+    def _admit(self):
+        """FCFS admission: take waiting requests while a slot is free and the
+        block pool covers their prompt plus one lookahead token, then prefill
+        them together in fixed-width chunks (one jitted program)."""
+        free_slots = [s for s in range(self.slots) if self.slot_req[s] is None]
+        batch: list[tuple[int, Request]] = []
+        reserve = 0  # lookahead blocks promised to earlier batch members
+        while self.queue and free_slots and len(batch) < self.prefill_batch:
+            req = self.queue[0]
+            n_tok = len(self._seq_tokens(req))
+            # admission wants the prompt *plus one lookahead token* free —
+            # counting lookahead already reserved by this batch's earlier
+            # members — so a fresh admission doesn't immediately preempt on
+            # its first decode tick
+            need = blocks_for(n_tok + 1, self.block_size)
+            if need + reserve > self.kv.num_free or \
+                    not self.kv.manager.allocate(req.rid, n_tok):
+                break  # head-of-line blocks: keep FCFS order
+            reserve += need - blocks_for(n_tok, self.block_size)
+            self.queue.pop(0)
+            batch.append((free_slots.pop(0), req))
+        if not batch:
+            return
+        # pad the prompt batch to the fixed prefill width (dummy rows write
+        # only to the null block) so the chunk program has one static shape
+        prompts = [self._seq_tokens(r) for _, r in batch]
+        prompts += [[]] * (self.prefill_batch - len(batch))
+        bt = self.kv.block_table([r.rid for _, r in batch]
+                                 + [None] * (self.prefill_batch - len(batch)))
+        logits, self.kv.data = steps.chunked_prefill(
+            self._prefill_chunk, self.params, self.kv.data, prompts, bt,
+            chunk=self.prefill_chunk)
+        # first-token latency: stamp only after the device finishes
+        jax.block_until_ready(logits)
+        t_ready = time.time()
+        for i, (s, req) in enumerate(batch):
+            if not req.t_first:
+                req.t_first = t_ready
+            tok = self._sample(logits[i])
+            if self._emit(req, tok):  # eos on first token / max_tokens=1
+                self.kv.manager.free(req.rid)
+                continue
+            self.slot_req[s] = req
+            self.slot_pos[s] = len(prompts[i])
+            self._admit_order.append(s)
+
+    def _preempt_newest(self) -> int | None:
+        """Free the most recently admitted sequence back to the waiting
+        queue's head; returns its slot.  Recompute-style: emitted tokens
+        ride along and are re-prefilled with the prompt on re-admission."""
+        for s in reversed(self._admit_order):
+            if self.slot_req[s] is None:
+                continue
+            req = self.slot_req[s]
+            self.kv.manager.free(req.rid)
+            self.slot_req[s] = None
+            self._admit_order.remove(s)
+            self.queue.insert(0, req)
+            return s
+        return None
+
+    def _decode_tick(self):
+        # grow each active sequence's table to cover the incoming token,
+        # preempting the newest-admitted sequence on block exhaustion (the
+        # grower itself, if it is the newest — FCFS favors older requests)
+        for s in list(self._admit_order):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            while not self.kv.manager.ensure(req.rid, int(self.slot_pos[s]) + 1):
+                victim = self._preempt_newest()
+                if victim == s:
+                    break  # the grower was evicted; it retries after re-admission
+                if victim is None:  # unreachable: submit-time capacity check
+                    raise RuntimeError(
+                        f"paged pool too small: sequence {req.rid} alone "
+                        f"cannot grow to {int(self.slot_pos[s]) + 1} tokens")
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return
+        toks = np.zeros((self.slots, 1), np.int32)
+        positions = np.full((self.slots,), -1, np.int32)
+        for s in active:
+            toks[s, 0] = self.slot_req[s].out_tokens[-1]
+            positions[s] = self.slot_pos[s]
+        bt = self.kv.block_table([self.slot_req[s].rid if self.slot_req[s]
+                                  else None for s in range(self.slots)])
+        logits, self.kv.data = self._decode(
+            self.params, self.kv.data, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.asarray(positions))
+        for s in active:
+            req = self.slot_req[s]
+            tok = self._sample(logits[s])
+            self.slot_pos[s] += 1
+            if self._emit(req, tok) or self.slot_pos[s] >= self.max_len - 1:
+                if not req.done:  # frontier hit: force-finish
                     req.done = True
                     req.t_done = time.time()
                     self.finished.append(req)
-                    self.slot_req[s] = None
-
-    def _sample(self, logits) -> int:
-        """Greedy argmax, or seeded temperature/top-k sampling."""
-        if self.greedy:
-            return int(jnp.argmax(logits))
-        self._key, sub = jax.random.split(self._key)
-        scaled = logits.astype(jnp.float32) / max(self.temperature, 1e-6)
-        if self.top_k > 0:
-            k = min(self.top_k, scaled.shape[-1])
-            kth = jax.lax.top_k(scaled, k)[0][-1]
-            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-        return int(jax.random.categorical(sub, scaled))
+                self.kv.manager.free(req.rid)
+                self.slot_req[s] = None
+                self._admit_order.remove(s)

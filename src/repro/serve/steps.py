@@ -1,19 +1,29 @@
-"""Serving-side sharding rules and config transforms.
+"""Serving-side step builders, sharding rules, and config transforms.
 
-Serving parameterization (the paper's deployment path): TTD stays on, all
-non-TT linears go INT4 (w4a16), params are TP-sharded over ``model`` only
-(no FSDP — decode latency wants weights resident).  KV caches shard batch
-over ``data`` and kv-heads / state width over ``model``.
+Jitted program construction for both engine flavors lives here —
+``ring_step_fns`` / ``paged_step_fns`` are memoized on the model so every
+:class:`~repro.serve.engine.Engine` instance over the same model shares one
+trace cache (the scheduler fuzz suite builds dozens of engines), plus the
+``chunked_prefill`` driver that feeds several waiting prompts through one
+fixed-width jitted chunk program.
+
+Sharding rules (the paper's deployment path): TTD stays on, all non-TT
+linears go INT4 (w4a16), params are TP-sharded over ``model`` only (no FSDP
+— decode latency wants weights resident).  KV caches shard batch over
+``data`` and kv-heads / state width over ``model``.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..config import ModelConfig, QuantConfig
+from ..kernels.dispatch import backend_override
 
 
 def serve_config_of(cfg: ModelConfig, kernel_backend: str | None = None) -> ModelConfig:
@@ -28,6 +38,104 @@ def serve_config_of(cfg: ModelConfig, kernel_backend: str | None = None) -> Mode
     if kernel_backend is not None:
         cfg = cfg.replace(kernel_backend=kernel_backend)
     return cfg
+
+
+# ---------------------------------------------------------------------------
+# Jitted step builders (shared across engine instances)
+# ---------------------------------------------------------------------------
+CACHE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                "float16": jnp.float16, "int8": jnp.int8}
+
+
+def canonical_cache_dtype(dtype) -> str:
+    """Normalize a user-facing cache dtype (str or jnp dtype) to its name."""
+    if isinstance(dtype, str):
+        if dtype not in CACHE_DTYPES:
+            raise ValueError(f"unknown cache dtype {dtype!r}")
+        return dtype
+    name = jnp.dtype(dtype).name
+    if name not in CACHE_DTYPES:
+        raise ValueError(f"unknown cache dtype {dtype!r}")
+    return name
+
+
+@functools.lru_cache(maxsize=64)
+def ring_step_fns(model, cache_dtype_name: str, max_len: int,
+                  kernel_backend: str | None):
+    """(prefill, decode) jitted programs for the ring-cache engine.
+
+    The kernel backend resolves at trace time, so the engine's choice (if
+    any) is pinned here for both programs.
+    """
+    cache_dtype = CACHE_DTYPES[cache_dtype_name]
+
+    def _prefill(params, batch):
+        with backend_override(kernel_backend):
+            return model.prefill(params, batch, cache_dtype=cache_dtype,
+                                 max_len=max_len)
+
+    def _decode(params, cache, batch, pos):
+        with backend_override(kernel_backend):
+            return model.decode_step(params, cache, batch, pos)
+
+    return jax.jit(_prefill), jax.jit(_decode)
+
+
+@functools.lru_cache(maxsize=64)
+def paged_step_fns(model, kernel_backend: str | None):
+    """(prefill_chunk, decode) jitted programs for the paged-cache engine.
+
+    Both take the block tables and per-sequence positions as device args, so
+    one compiled program serves every schedule state of a given shape.
+    """
+
+    def _prefill_chunk(params, caches, tokens, block_tables, positions):
+        with backend_override(kernel_backend):
+            return model.prefill_paged_chunk(params, caches,
+                                             {"tokens": tokens},
+                                             block_tables, positions)
+
+    def _decode(params, caches, tokens, block_tables, positions):
+        with backend_override(kernel_backend):
+            return model.decode_step_paged(params, caches, {"tokens": tokens},
+                                           block_tables, positions)
+
+    return jax.jit(_prefill_chunk), jax.jit(_decode)
+
+
+def chunked_prefill(prefill_chunk_fn, params, caches, prompts, block_tables,
+                    *, chunk: int):
+    """Prefill several prompts through repeated fixed-width chunk calls.
+
+    prompts: list of B token lists (ragged; empty lists mark dummy rows used
+    to pad the batch to a fixed width — their positions are all ``-1`` so
+    their K/V lands in the null block).  block_tables: (B, W) int array.
+    Every call processes a (B, chunk) tile, so multiple waiting prompts
+    prefill together in ``ceil(max_len/chunk)`` jitted calls of one static
+    shape.  Returns (last_logits (B, V) f32 — garbage for dummy rows —
+    and the updated caches).
+    """
+    b = len(prompts)
+    lens = [len(p) for p in prompts]
+    max_l = max(max(lens), 1)
+    n_chunks = -(-max_l // chunk)
+    toks = np.zeros((b, n_chunks * chunk), np.int32)
+    pos = np.full((b, n_chunks * chunk), -1, np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+        pos[i, :len(p)] = np.arange(len(p))
+    bt = jnp.asarray(block_tables, jnp.int32)
+    last = [None] * b
+    for c in range(n_chunks):
+        sl = slice(c * chunk, (c + 1) * chunk)
+        logits, caches = prefill_chunk_fn(params, caches,
+                                          jnp.asarray(toks[:, sl]), bt,
+                                          jnp.asarray(pos[:, sl]))
+        for i, n in enumerate(lens):
+            if n and c * chunk <= n - 1 < (c + 1) * chunk:
+                last[i] = logits[i, (n - 1) % chunk]
+    return jnp.stack([x if x is not None else jnp.zeros_like(last[lens.index(max_l)])
+                      for x in last]), caches
 
 
 def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):

@@ -1,11 +1,14 @@
 """Continuous-batching engine vs direct decode reference."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, PagedEngine
 
 
 def _ref_generate(model, params, prompt, n):
@@ -75,3 +78,108 @@ def test_engine_continuous_batching(key):
     assert len(done) == 4
     for p, r in zip(prompts, reqs):
         assert r.out_tokens == _ref_generate(model, params, p, 5), p
+
+
+def _tiny():
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.mark.parametrize("kind", ["ring", "paged"])
+def test_t_first_stamped_after_device_sync(kind, monkeypatch):
+    """Regression: first-token latency must be timed after the device
+    finishes prefill, not when the async dispatch returns.  We slow down
+    ``jax.block_until_ready`` and record when each sync completed; t_first
+    must be at or after the first completed sync."""
+    model, params = _tiny()
+    real_sync = jax.block_until_ready
+    sync_done = []
+
+    def slow_sync(x):
+        out = real_sync(x)
+        time.sleep(0.02)
+        sync_done.append(time.time())
+        return out
+
+    monkeypatch.setattr(jax, "block_until_ready", slow_sync)
+    if kind == "ring":
+        eng = Engine(model, params, slots=2, max_len=96)
+    else:
+        eng = PagedEngine(model, params, slots=2, max_len=96, block_size=8)
+    req = eng.submit([3, 1, 4], max_tokens=3)
+    eng.run()
+    assert sync_done, "engine never synced before stamping t_first"
+    assert req.t_first >= sync_done[0]
+    assert req.t_submit < req.t_first <= req.t_done
+
+
+@pytest.mark.parametrize("cache_dtype,exact", [
+    ("float32", True), ("float16", False), ("int8", False),
+])
+def test_paged_engine_cache_dtypes(cache_dtype, exact):
+    """fp16/int8 paged caches serve plausible tokens (exact parity only for
+    the f32 cache; lossy caches must still finish every request)."""
+    model, params = _tiny()
+    prompts = [[1, 2, 3], [4, 5, 6, 7]]
+    ref = PagedEngine(model, params, slots=1, max_len=64, block_size=4)
+    ref_reqs = [ref.submit(p, max_tokens=5) for p in prompts]
+    ref.run()
+    eng = PagedEngine(model, params, slots=2, max_len=64, block_size=4,
+                      cache_dtype=cache_dtype)
+    reqs = [eng.submit(p, max_tokens=5) for p in prompts]
+    eng.run()
+    for r, rr in zip(reqs, ref_reqs):
+        assert r.done and len(r.out_tokens) == 5
+        assert all(0 <= t < model.cfg.vocab_size for t in r.out_tokens)
+        if exact:
+            assert r.out_tokens == rr.out_tokens
+
+
+def test_submit_validation():
+    """Empty prompts and requests that could never fit the pool are rejected
+    at submit (not as a mid-run engine crash)."""
+    model, params = _tiny()
+    ring = Engine(model, params, slots=2, max_len=96)
+    with pytest.raises(ValueError):
+        ring.submit([], max_tokens=2)
+    eng = PagedEngine(model, params, slots=1, max_len=64, block_size=4,
+                      num_blocks=3)  # 2 usable blocks = 8 positions
+    with pytest.raises(ValueError):
+        eng.submit([], max_tokens=2)
+    with pytest.raises(ValueError):  # worst case 10 tokens -> 3 blocks > 2
+        eng.submit([1] * 8, max_tokens=2)
+    # a request that fits the pool exactly is fine and completes
+    req = eng.submit([1, 2, 3, 4], max_tokens=4)  # worst 8 tokens = 2 blocks
+    eng.run()
+    assert req.done and len(req.out_tokens) == 4
+
+
+def test_paged_minimal_pool_single_sequence():
+    """The smallest admissible pool serves a request end-to-end: admission's
+    +1 lookahead and on-demand growth never hit the unreachable-deadlock
+    path (regression for admission lacking the lookahead check)."""
+    model, params = _tiny()
+    eng = PagedEngine(model, params, slots=1, max_len=64, block_size=4,
+                      num_blocks=4)  # 3 usable blocks = 12 positions
+    ref = PagedEngine(model, params, slots=1, max_len=64, block_size=4)
+    r = eng.submit([1, 2, 3, 4, 5, 6, 7, 8], max_tokens=4)  # worst 12 tokens
+    rr = ref.submit([1, 2, 3, 4, 5, 6, 7, 8], max_tokens=4)
+    eng.run()
+    ref.run()
+    assert r.done and r.out_tokens == rr.out_tokens
+    assert eng.kv.num_free == eng.kv.num_blocks - 1
+
+
+def test_ring_rejects_overlong_prompt():
+    """The ring engine must reject prompts that don't fit its window instead
+    of silently serving them from a cropped cache."""
+    model, params = _tiny()
+    eng = Engine(model, params, slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(1, 18)), max_tokens=2)
+    req = eng.submit(list(range(1, 12)), max_tokens=3)
+    eng.run()
+    assert req.done and len(req.out_tokens) == 3

@@ -5,9 +5,11 @@ import numpy as np
 import pytest
 
 from repro.core import TTSpec, init_tt_linear, quantize_int4
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
 from repro.kernels.int4_matmul import int4_matmul_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.tt_linear import pick_block_b, tt_linear_pallas
+from repro.models.modules import attention_dense
 
 
 @pytest.mark.parametrize("n,m,r,d,b,dtype", [
@@ -161,3 +163,121 @@ def test_int4_kernel_fused_epilogue(b, k, m, use_scale, key):
                           bias=bi, residual=res)
     assert y_k.shape == (b, m)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (serve path) — kernel vs gather oracle vs dense math
+# ---------------------------------------------------------------------------
+def _paged_case(seed, *, block_size, ctx_lens, hkv=2, g=2, dh=16,
+                cache_dtype=jnp.float32):
+    """Random paged cache with each sequence's context scattered over a
+    shuffled block pool; returns (q, cache, block_tables, qpos)."""
+    rng = np.random.default_rng(seed)
+    b, h = len(ctx_lens), hkv * g
+    w = max(1, max((c + block_size - 1) // block_size for c in ctx_lens))
+    nb = 1 + sum((c + block_size - 1) // block_size for c in ctx_lens) + 2
+    shape = (nb, block_size, hkv, dh)
+    if cache_dtype == jnp.int8:
+        cache = {
+            "k": jnp.asarray(rng.integers(-127, 128, shape), jnp.int8),
+            "v": jnp.asarray(rng.integers(-127, 128, shape), jnp.int8),
+            "k_scale": jnp.asarray(rng.uniform(0.005, 0.02, shape[:-1]), jnp.float32),
+            "v_scale": jnp.asarray(rng.uniform(0.005, 0.02, shape[:-1]), jnp.float32),
+        }
+    else:
+        cache = {
+            "k": jnp.asarray(rng.standard_normal(shape), cache_dtype),
+            "v": jnp.asarray(rng.standard_normal(shape), cache_dtype),
+        }
+    pool = list(rng.permutation(np.arange(1, nb)))
+    bt = np.zeros((b, w), np.int32)
+    for i, c in enumerate(ctx_lens):
+        for j in range((c + block_size - 1) // block_size):
+            bt[i, j] = pool.pop()
+    q = jnp.asarray(rng.standard_normal((b, h, dh)), jnp.float32)
+    qpos = jnp.asarray(np.asarray(ctx_lens, np.int32) - 1)
+    return q, cache, jnp.asarray(bt), qpos
+
+
+@pytest.mark.parametrize("block_size,ctx_lens,cache_dtype", [
+    (4, (7, 4, 0, 1), jnp.float32),    # ragged last block + empty + singleton
+    (8, (16, 3, 9), jnp.float32),      # exact block multiple + ragged
+    (16, (5,), jnp.float32),           # context smaller than one block
+    (4, (13, 8, 1), jnp.float16),
+    (8, (12, 5), jnp.bfloat16),
+    (4, (6, 2, 0), jnp.int8),          # per-block-scale dequant + empty seq
+    (8, (17, 1), jnp.int8),
+])
+def test_paged_attention_kernel_parity(block_size, ctx_lens, cache_dtype):
+    """Fused online-softmax kernel vs the gather oracle across block sizes ×
+    seq lens × cache dtypes, including the ragged-last-block and
+    empty-sequence (qpos = -1) edge cases."""
+    q, cache, bt, qpos = _paged_case(block_size * 131 + len(ctx_lens),
+                                     block_size=block_size, ctx_lens=ctx_lens,
+                                     cache_dtype=cache_dtype)
+    y_k = paged_attention_pallas(q, cache, bt, qpos, interpret=True)
+    y_r = ref.paged_attention(q[:, None], cache, bt, qpos[:, None])[:, 0]
+    tol = 1e-5 if cache_dtype in (jnp.float32, jnp.int8) else 3e-2
+    scale = float(jnp.max(jnp.abs(y_r))) or 1.0
+    assert float(jnp.max(jnp.abs(y_k - y_r))) / scale < tol
+    # empty sequences must return exactly zero from both paths
+    for i, c in enumerate(ctx_lens):
+        if c == 0:
+            assert float(jnp.max(jnp.abs(y_k[i]))) == 0.0
+            assert float(jnp.max(jnp.abs(y_r[i]))) == 0.0
+
+
+def test_paged_attention_dispatch_backends():
+    """ref and pallas-interpret agree through the dispatch layer (the policy
+    chain the serve engine pins)."""
+    q, cache, bt, qpos = _paged_case(7, block_size=4, ctx_lens=(9, 2, 0))
+    y_ref = dispatch.paged_attention(q, cache, bt, qpos, backend="ref")
+    y_pl = dispatch.paged_attention(q, cache, bt, qpos, backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_ref_matches_dense_attention():
+    """The gather oracle itself vs models.modules.attention_dense on a
+    contiguous (identity block table) layout — ties the paged math back to
+    the attention used everywhere else."""
+    rng = np.random.default_rng(3)
+    bs, ctx, hkv, g, dh = 4, 11, 2, 2, 16
+    nb = 1 + (ctx + bs - 1) // bs
+    k = rng.standard_normal((nb, bs, hkv, dh)).astype(np.float32)
+    v = rng.standard_normal((nb, bs, hkv, dh)).astype(np.float32)
+    cache = {"k": jnp.asarray(k), "v": jnp.asarray(v)}
+    bt = jnp.asarray(np.arange(1, nb, dtype=np.int32)[None])  # in-order blocks
+    q = jnp.asarray(rng.standard_normal((1, hkv * g, dh)), jnp.float32)
+    y_p = ref.paged_attention(q[:, None], cache, bt, jnp.asarray([[ctx - 1]]))[:, 0]
+    kf = jnp.asarray(k[1:].reshape(1, -1, hkv, dh))
+    vf = jnp.asarray(v[1:].reshape(1, -1, hkv, dh))
+    kpos = jnp.arange(kf.shape[1], dtype=jnp.int32)
+    y_d = attention_dense(q[:, None], kf, vf, qpos=jnp.asarray([ctx - 1]),
+                          kpos=kpos, kmask=kpos < ctx)[:, 0]
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_int8_write_read_roundtrip():
+    """paged_kv_update's int8 quantization round-trips through the oracle
+    within int8 rounding error."""
+    from repro.models.modules import paged_kv_update
+    rng = np.random.default_rng(11)
+    bs, hkv, dh = 4, 2, 8
+    cache = {
+        "k": jnp.zeros((4, bs, hkv, dh), jnp.int8),
+        "v": jnp.zeros((4, bs, hkv, dh), jnp.int8),
+        "k_scale": jnp.zeros((4, bs, hkv), jnp.float32),
+        "v_scale": jnp.zeros((4, bs, hkv), jnp.float32),
+    }
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    k_new = jnp.asarray(rng.standard_normal((1, 6, hkv, dh)), jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal((1, 6, hkv, dh)), jnp.float32)
+    pos = jnp.arange(6, dtype=jnp.int32)[None]
+    cache = paged_kv_update(cache, k_new, v_new, bt, pos)
+    k_rt, v_rt = ref.gather_paged_kv(cache, bt)
+    np.testing.assert_allclose(np.asarray(k_rt[0, :6]), np.asarray(k_new[0]),
+                               atol=2e-2)
+    np.testing.assert_allclose(np.asarray(v_rt[0, :6]), np.asarray(v_new[0]),
+                               atol=2e-2)

@@ -1,0 +1,140 @@
+"""BlockManager / PagedKVCache invariants.
+
+Deterministic unit tests always run; the randomized-op-sequence property
+test uses hypothesis when installed (optional-skip like the dist tests).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: skip only the property-based tests
+    from conftest import given, settings, st  # noqa: F401
+
+from repro.serve.kv_cache import BlockManager, blocks_for
+
+
+def _check_invariants(m: BlockManager):
+    """Pool conservation, disjoint ownership, null block never handed out."""
+    owned = [b for sid in m.seq_ids() for b in m.table(sid)]
+    assert len(owned) == len(set(owned)), "block double-allocated"
+    assert 0 not in owned, "null block handed out"
+    assert m.num_free + len(owned) == m.num_blocks - 1, "pool leak"
+    for sid in m.seq_ids():
+        assert len(m.table(sid)) * m.block_size >= m.seq_len(sid)
+    assert m.live_tokens() == sum(m.seq_len(s) for s in m.seq_ids())
+
+
+def test_blocks_for():
+    assert blocks_for(0, 4) == 0
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+def test_no_double_alloc_and_free_returns_all():
+    m = BlockManager(8, 4)  # 7 usable
+    assert m.allocate(1, 9)   # 3 blocks
+    assert m.allocate(2, 8)   # 2 blocks
+    _check_invariants(m)
+    assert m.num_free == 2
+    assert set(m.table(1)).isdisjoint(m.table(2))
+    freed = m.free(1)
+    assert len(freed) == 3
+    assert m.num_free == 5
+    _check_invariants(m)
+    m.free(2)
+    assert m.num_free == 7
+    assert m.live_tokens() == 0
+
+
+def test_allocate_is_atomic_when_short():
+    m = BlockManager(4, 2)  # 3 usable
+    assert m.allocate(1, 4)  # 2 blocks
+    assert not m.allocate(2, 5)  # needs 3 > 1 free: refuse, allocate nothing
+    assert 2 not in m.seq_ids()
+    assert m.num_free == 1
+    _check_invariants(m)
+
+
+def test_ensure_grows_and_is_atomic():
+    m = BlockManager(5, 2)  # 4 usable
+    assert m.allocate(1, 2)  # 1 block
+    assert m.ensure(1, 3)    # grow to 2 blocks
+    assert len(m.table(1)) == 2
+    assert m.ensure(1, 3)    # idempotent
+    assert len(m.table(1)) == 2
+    assert m.allocate(2, 4)  # takes remaining 2
+    assert not m.ensure(1, 7)  # needs 2 more, 0 free
+    assert len(m.table(1)) == 2
+    _check_invariants(m)
+
+
+def test_double_register_rejected():
+    m = BlockManager(4, 2)
+    assert m.allocate(1, 2)
+    with pytest.raises(ValueError):
+        m.allocate(1, 2)
+
+
+def test_utilization_matches_live_tokens():
+    m = BlockManager(16, 4)
+    m.allocate(1, 6)   # 2 blocks, 8 slots
+    m.allocate(2, 4)   # 1 block, 4 slots
+    assert m.live_tokens() == 10
+    assert m.allocated_slots() == 12
+    assert m.utilization() == pytest.approx(10 / 12)
+    m.ensure(1, 7)
+    assert m.utilization() == pytest.approx(11 / 12)
+    m.free(1)
+    assert m.utilization() == pytest.approx(1.0)
+    m.free(2)
+    assert m.utilization() == 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 5),
+                          st.integers(0, 17)), max_size=40),
+       st.integers(3, 12), st.integers(1, 5))
+def test_block_manager_random_ops(ops, num_blocks, block_size):
+    """Random alloc/ensure/free sequences keep every invariant: no block is
+    owned twice, frees return everything, accounting matches live tokens."""
+    m = BlockManager(num_blocks, block_size)
+    for op, sid, n in ops:
+        if op == 0 and sid not in m.seq_ids():
+            free_before = m.num_free
+            ok = m.allocate(sid, n)
+            assert ok == (blocks_for(n, block_size) <= free_before)
+        elif op == 1 and sid in m.seq_ids():
+            before = len(m.table(sid))
+            if not m.ensure(sid, n):
+                assert len(m.table(sid)) == before  # atomic
+        elif op == 2 and sid in m.seq_ids():
+            owned = set(m.table(sid))
+            freed = m.free(sid)
+            assert set(freed) == owned
+        _check_invariants(m)
+
+
+def test_paged_kv_cache_block_table_packing():
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.serve.kv_cache import PagedKVCache
+
+    cfg = get_config("tinyllama-1.1b", reduced=True)
+    model = get_model(cfg)
+    kv = PagedKVCache(model, num_blocks=8, block_size=4, max_len=16,
+                      cache_dtype=jnp.float32)
+    assert kv.table_width == 4
+    assert kv.manager.allocate(7, 6)  # 2 blocks
+    bt = kv.block_table([7, None])
+    assert bt.shape == (2, 4)
+    assert list(bt[0, :2]) == kv.manager.table(7)
+    assert (bt[0, 2:] == 0).all() and (bt[1] == 0).all()  # null-padded
+    # int8 layout carries per-(block-slot, head) scale tables
+    kv8 = PagedKVCache(model, num_blocks=8, block_size=4, max_len=16,
+                       cache_dtype=jnp.int8)
+    seg = kv8.data[0]
+    assert seg["k"].dtype == jnp.int8
+    assert seg["k_scale"].shape == seg["k"].shape[:-1]
