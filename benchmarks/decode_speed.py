@@ -4,12 +4,13 @@ Default mode (Fig. 9a analogue): decode tokens/s vs number of decoded
 tokens, with and without TTD, from the GVSA cycle model (KV cache growth
 slows attention; the TTD linears keep their constant advantage).
 
-``--serve`` mode: drive the *real* continuous-batching engines (ring
-reference vs paged KV cache, ``repro.serve.engine``) over the same request
-mix at several slot counts, reporting wall-clock tokens/sec and mean
-first-token latency, and writing the comparison to ``BENCH_serve.json``.
-CPU wall-time on the reduced config — a structural comparison (scheduling
-+ dispatch overheads), not TPU performance.
+``--serve`` mode: drive the *real* unified session engine
+(``repro.serve.engine``, DESIGN.md §7) over the same request mix for
+**every model family** — dense (paged + ring backends), moe, griffin,
+rwkv, whisper — at several slot counts, reporting wall-clock tokens/sec
+and mean first-token latency per family, and writing the rows to
+``BENCH_serve.json``.  CPU wall-time on the reduced configs — a structural
+comparison (scheduling + dispatch overheads), not TPU performance.
 """
 from __future__ import annotations
 
@@ -58,8 +59,19 @@ def run(report=print):
 
 
 # ---------------------------------------------------------------------------
-# Real-engine comparison: ring vs paged KV cache
+# Real-engine comparison: every family through the unified session engine
 # ---------------------------------------------------------------------------
+SERVE_FAMILIES = (
+    # (label, arch, backend or None for the family default)
+    ("dense/paged", "tinyllama-1.1b", "paged"),
+    ("dense/ring", "tinyllama-1.1b", "ring"),
+    ("moe", "kimi-k2-1t-a32b", None),
+    ("griffin", "recurrentgemma-2b", None),
+    ("rwkv", "rwkv6-7b", None),
+    ("encdec", "whisper-base", None),
+)
+
+
 def _workload(n_requests: int, max_tokens: int):
     """Deterministic mixed-length prompt set (same for every engine)."""
     return [([1 + (i % 7), 2, 3 + i] + list(range(4, 4 + (i * 3) % 9)),
@@ -67,10 +79,10 @@ def _workload(n_requests: int, max_tokens: int):
 
 
 def _bench_engine(make_engine, workload):
-    # warmup engine runs the *whole workload* untimed: ring prefill is
-    # shape-specialized per prompt length, so every distinct length must
-    # compile before the timed run (step programs are memoized per model in
-    # serve.steps, so the timed engine below hits the trace cache)
+    # warmup engine runs the *whole workload* untimed so every program shape
+    # (chunk grids, ragged decode) compiles before the timed run (step
+    # programs are memoized per session type in serve.steps, so the timed
+    # engine below hits the trace cache)
     warm = make_engine()
     for p, m in workload:
         warm.submit(p, max_tokens=m)
@@ -87,44 +99,39 @@ def _bench_engine(make_engine, workload):
             "mean_first_token_s": ftl}
 
 
-def run_serve(report=print, *, slot_counts=(2, 4, 8), n_requests=12,
+def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
               max_tokens=8, out_path="BENCH_serve.json"):
     import jax
 
-    from repro.models import get_model
-    from repro.serve.engine import Engine, PagedEngine
+    from repro.models import build_model
+    from repro.serve.engine import Engine
 
-    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
-        compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
     workload = _workload(n_requests, max_tokens)
     max_len = 96
     rows = []
-    report(f"== serve: ring vs paged, {n_requests} requests × {max_tokens} "
-           "tokens (CPU wall-clock, reduced config — structural comparison)")
-    for slots in slot_counts:
-        ring = _bench_engine(
-            lambda: Engine(model, params, slots=slots, max_len=max_len),
-            workload)
-        paged = _bench_engine(
-            lambda: PagedEngine(model, params, slots=slots, max_len=max_len,
-                                block_size=8, prefill_batch=min(slots, 4),
-                                prefill_chunk=8),
-            workload)
-        report(f"   slots={slots}: ring {ring['tok_per_s']:7.1f} tok/s "
-               f"ftl {ring['mean_first_token_s']*1e3:7.1f}ms | "
-               f"paged {paged['tok_per_s']:7.1f} tok/s "
-               f"ftl {paged['mean_first_token_s']*1e3:7.1f}ms | "
-               f"speedup {paged['tok_per_s']/ring['tok_per_s']:4.2f}x")
-        rows.append({"slots": slots, "ring": ring, "paged": paged})
+    report(f"== serve: families × slots, {n_requests} requests × {max_tokens} "
+           "tokens (CPU wall-clock, reduced configs — structural comparison)")
+    for label, arch, backend in SERVE_FAMILIES:
+        cfg = get_config(arch, reduced=True).replace(
+            compute_dtype="float32", param_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        for slots in slot_counts:
+            r = _bench_engine(
+                lambda: Engine(model, params, slots=slots, max_len=max_len,
+                               backend=backend, block_size=8,
+                               prefill_batch=min(slots, 4), prefill_chunk=8),
+                workload)
+            report(f"   {label:12s} slots={slots}: {r['tok_per_s']:7.1f} tok/s  "
+                   f"first-token {r['mean_first_token_s']*1e3:7.1f}ms")
+            rows.append({"family": label, "arch": arch, "slots": slots, **r})
     rec = {
         "workload": {"n_requests": n_requests, "max_tokens": max_tokens,
-                     "arch": "tinyllama-1.1b(reduced)", "max_len": max_len},
-        "note": "CPU wall-clock on the reduced config: compares scheduling/"
-                "memory structure (single-seq prefill + position-grouped ring "
-                "decode vs batched chunked prefill + one ragged paged decode "
-                "per tick), not TPU kernel performance.",
+                     "max_len": max_len},
+        "note": "CPU wall-clock on the reduced configs: compares the "
+                "families' state-backend structure through one scheduler "
+                "(batched chunked prefill + one ragged decode call per "
+                "tick), not TPU kernel performance.",
         "rows": rows,
     }
     Path(out_path).write_text(json.dumps(rec, indent=1))
@@ -140,7 +147,7 @@ def main(argv=None):
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     if args.serve:
-        run_serve(slot_counts=tuple(args.slots or (2, 4, 8)),
+        run_serve(slot_counts=tuple(args.slots or (2, 4)),
                   out_path=args.out)
     else:
         run()

@@ -234,8 +234,8 @@ def _param_bytes(cfg, serve: bool) -> float:
         return (blocks_bits + emb_bits) / 8.0
     # other families: count from eval_shape-free param math (approx: dense)
     import jax
-    from repro.models import get_model
-    shapes = jax.eval_shape(get_model(cfg).init, jax.random.PRNGKey(0))
+    from repro.models import build_model
+    shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
     return float(sum(math.prod(x.shape) * (2 if serve or cfg.param_dtype == "bfloat16" else 4)
                      for x in jax.tree.leaves(shapes)))
 

@@ -17,7 +17,7 @@ from repro.config import QuantConfig, TrainConfig, TTDConfig
 from repro.configs import get_config
 from repro.core.compress import compress_model, compression_report
 from repro.data.pipeline import DataConfig, make_source
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.losses import chunked_cross_entropy
 from repro.train.step import build_train_step, init_train_state
 
@@ -37,7 +37,7 @@ def _eval_ppl(model, params, src, steps=8, start=10_000):
 def _finetune(cfg_t, params_t, steps, src, seed=1):
     """Brief post-compression fine-tune of the TT cores (standard TTD
     practice; exercises TT-as-trainable-parameters)."""
-    model_t = get_model(cfg_t)
+    model_t = build_model(cfg_t)
     tc = TrainConfig(global_batch=8, seq_len=64, lr=1e-3, warmup_steps=5,
                      total_steps=steps, optimizer="adamw", remat="none")
     from repro.optim import init_optimizer
@@ -54,7 +54,7 @@ def run(report=print, train_steps=120, ranks=(2, 4, 8, 16), ft_steps=60):
     cfg_d = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32",
         ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
-    model_d = get_model(cfg_d)
+    model_d = build_model(cfg_d)
     tc = TrainConfig(global_batch=8, seq_len=64, lr=3e-3, warmup_steps=10,
                      total_steps=train_steps, optimizer="adamw", remat="none")
     state = init_train_state(model_d, tc, jax.random.PRNGKey(0))
@@ -69,7 +69,7 @@ def run(report=print, train_steps=120, ranks=(2, 4, 8, 16), ft_steps=60):
     rows = [("dense", 1.0, base_ppl, 0.0)]
     for r in ranks:
         cfg_t = cfg_d.replace(ttd=TTDConfig(enabled=True, rank=r, d=3))
-        model_t = get_model(cfg_t)
+        model_t = build_model(cfg_t)
         params_t = compress_model(state.params, cfg_d, cfg_t, svd_method="svd")
         ppl = _eval_ppl(model_t, params_t, src)
         rep = compression_report(cfg_t)

@@ -16,7 +16,7 @@ from repro.config import QuantConfig, TrainConfig, TTDConfig
 from repro.configs import get_config
 from repro.core.compress import compress_model, compression_report
 from repro.data.pipeline import DataConfig, make_source
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.losses import chunked_cross_entropy
 from repro.train.step import build_train_step, init_train_state
 
@@ -37,7 +37,7 @@ def main():
     cfg_d = get_config("llama2-7b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32",
         ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
-    model_d = get_model(cfg_d)
+    model_d = build_model(cfg_d)
     tc = TrainConfig(global_batch=8, seq_len=64, lr=3e-3, warmup_steps=10,
                      total_steps=150, optimizer="adamw", remat="none")
     state = init_train_state(model_d, tc, jax.random.PRNGKey(0))
@@ -53,7 +53,7 @@ def main():
     # --- the paper's compression recipe ---
     cfg_t = cfg_d.replace(ttd=TTDConfig(enabled=True, rank=8, d=3),
                           quant=QuantConfig(enabled=True, group_size=32))
-    model_t = get_model(cfg_t)
+    model_t = build_model(cfg_t)
     params_t = compress_model(state.params, cfg_d, cfg_t, svd_method="svd")
 
     rep = compression_report(cfg_t)

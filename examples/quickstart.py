@@ -11,7 +11,7 @@ import jax
 from repro.config import TrainConfig
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.step import build_train_step, init_train_state
 from repro.train.trainer import Trainer
 
@@ -19,7 +19,7 @@ from repro.train.trainer import Trainer
 def main():
     cfg = get_config("tinyllama-1.1b", reduced=True)
     print(f"model: {cfg.name} (reduced) — TT rank {cfg.ttd.rank} on roles {cfg.ttd.roles[:4]}…")
-    model = get_model(cfg)
+    model = build_model(cfg)
     tc = TrainConfig(global_batch=8, seq_len=64, lr=3e-3, warmup_steps=10,
                      total_steps=150, optimizer="adamw", remat="none")
     state = init_train_state(model, tc, jax.random.PRNGKey(0))

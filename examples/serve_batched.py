@@ -1,24 +1,40 @@
-"""Serve a small TT-compressed model with continuous batching: ring vs paged.
+"""Serve small TT-compressed models with continuous batching — every family
+through one engine.
 
     PYTHONPATH=src python examples/serve_batched.py
 
 Eight requests with different prompt lengths share 3 decode slots; finished
 requests free resources for queued ones mid-flight.  The same workload runs
-through both engines:
+through the unified session engine (DESIGN.md §7) for a transformer (both
+its state backends) and a recurrent family:
 
-* ``Engine`` — per-slot ring caches, single-sequence prefill (reference)
-* ``PagedEngine`` — paged KV blocks + block tables, batched chunked prefill,
-  one ragged decode call per tick (DESIGN.md §6)
+* ``backend="paged"`` — shared KV block pools + block tables
+* ``backend="ring"``  — per-slot K/V rings (the SWA-capable layout)
+* rwkv               — constant-size recurrent state
 
-and their greedy outputs are asserted token-identical.
+and every request's greedy output is asserted token-identical to generating
+it alone via ``model.prefill`` + ``model.decode_step``.
 """
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.models import get_model
-from repro.serve.engine import Engine, PagedEngine
+from repro.models import build_model
+from repro.serve.engine import Engine
+
+
+def reference(model, params, prompt, n):
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+                                  cache_dtype=jnp.float32, max_len=96)
+    out = [int(jnp.argmax(logits[0]))]
+    for pos in range(len(prompt), len(prompt) + n - 1):
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+            jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
 
 
 def serve(engine, prompts):
@@ -29,27 +45,28 @@ def serve(engine, prompts):
     assert len(done) == len(prompts)
     toks = sum(len(r.out_tokens) for r in done)
     ftl = sum(r.t_first - r.t_submit for r in reqs) / len(reqs)
-    print(f"  {type(engine).__name__:12s}: {toks} tokens in {wall:.2f}s "
-          f"({toks / wall:.1f} tok/s, mean first-token {ftl * 1e3:.0f}ms)")
+    print(f"  {engine.cfg.family:8s}/{engine.session.backend:9s}: "
+          f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, "
+          f"mean first-token {ftl * 1e3:.0f}ms)")
     return [r.out_tokens for r in reqs]
 
 
 def main():
-    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
-        compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
     prompts = [[1 + i, 2, 3 + i] + list(range(4, 4 + i)) for i in range(8)]
-
     print(f"serving {len(prompts)} requests on 3 slots (CPU):")
-    ring_out = serve(Engine(model, params, slots=3, max_len=96), prompts)
-    paged_out = serve(PagedEngine(model, params, slots=3, max_len=96,
-                                  block_size=8, prefill_batch=2,
-                                  prefill_chunk=8), prompts)
-    assert ring_out == paged_out, "paged outputs diverged from ring reference"
-    for rid, out in enumerate(ring_out[:4]):
-        print(f"  req {rid}: prompt_len={len(prompts[rid])} -> {out}")
-    print("OK (ring and paged token-identical)")
+    for arch, backends in (("tinyllama-1.1b", ("paged", "ring")),
+                           ("rwkv6-7b", (None,))):
+        cfg = get_config(arch, reduced=True).replace(
+            compute_dtype="float32", param_dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        expected = [reference(model, params, p, 12) for p in prompts]
+        for backend in backends:
+            out = serve(Engine(model, params, slots=3, max_len=96,
+                               block_size=8, prefill_batch=2, prefill_chunk=8,
+                               backend=backend), prompts)
+            assert out == expected, f"{arch}/{backend} diverged from reference"
+    print("OK (all backends token-identical to the one-request reference)")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ import jax
 from repro.config import TrainConfig
 from repro.configs import ALL_ARCHS, get_config
 from repro.data.pipeline import DataConfig
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.step import build_train_step, init_train_state
 from repro.train.trainer import Trainer
 
@@ -60,7 +60,7 @@ def main():
         cfg = get_config(args.preset, reduced=args.reduced)
         tkw = dict(global_batch=8, seq_len=256, lr=1e-3)
 
-    model = get_model(cfg)
+    model = build_model(cfg)
     tc = TrainConfig(total_steps=args.steps, warmup_steps=max(args.steps // 20, 5),
                      optimizer=args.optimizer, microbatches=args.microbatches,
                      remat="dots", **tkw)

@@ -21,7 +21,7 @@ from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config  # noqa: E402
 from repro.dist.sharding import param_pspecs, param_shardings  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import input_specs  # noqa: E402
-from repro.models import get_model  # noqa: E402
+from repro.models import build_model  # noqa: E402
 from repro.optim import init_optimizer  # noqa: E402
 from repro.serve.steps import cache_shardings, serve_config_of  # noqa: E402
 from repro.train.step import (TrainState, batch_pspec, build_train_step,  # noqa: E402
@@ -150,7 +150,7 @@ def lower_cell(arch: str, cell: ShapeCell, mesh, *, baseline: bool = False,
                optimizer: str | None = None, reduced: bool = False):
     """Lower + compile one (arch × cell) on ``mesh``; return artifacts."""
     cfg = arch_cell_config(arch, cell, baseline=baseline, reduced=reduced)
-    model = get_model(cfg)
+    model = build_model(cfg)
     batch = input_specs(cfg, cell)
 
     with jax.set_mesh(mesh):
@@ -323,7 +323,7 @@ def probe_cell(arch: str, cell_name: str, out_dir: Path) -> dict:
         if ft is not None:
             cfg = cfg.replace(ttd=base_cfg.ttd.__class__(
                 **{**base_cfg.ttd.__dict__, "first_tt_block": ft}))
-        model = get_model(cfg)
+        model = build_model(cfg)
         batch = input_specs(cfg, cell)
         # lower exactly like lower_cell but with the mutated cfg
         lowered, compiled = _lower_with_cfg(cfg, model, cell, mesh, arch)

@@ -1,11 +1,15 @@
-"""Serving launcher: continuous-batching engine over a registry model.
+"""Serving launcher: the unified session engine over a registry model.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --requests 8 --max-tokens 12
 
-Production deployment would load a TT+int4 compressed checkpoint
-(repro.core.compress) and shard params/caches over a (data, model) mesh via
-repro.serve.steps; this CLI demonstrates the full request path.
+Any family serves: the engine picks the architecture's default state
+backend (paged block pools, per-slot rings for SWA, recurrent state, or
+encoder-context + paged self-attention for enc-dec) — override with
+``--backend``.  Production deployment would load a TT+int4 compressed
+checkpoint (repro.core.compress) and shard params/state over a
+(data, model) mesh via repro.serve.steps; this CLI demonstrates the full
+request path.
 """
 from __future__ import annotations
 
@@ -15,7 +19,7 @@ import time
 import jax
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.models import get_model
+from repro.models import build_model
 from repro.serve.engine import Engine
 
 
@@ -23,17 +27,22 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b", choices=list(ALL_ARCHS))
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--backend", default=None,
+                    help="state backend (default: family's preferred)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=12)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, slots=args.slots, max_len=args.max_len)
+    engine = Engine(model, params, slots=args.slots, max_len=args.max_len,
+                    backend=args.backend, prefill_chunk=args.prefill_chunk)
+    print(f"{cfg.name}: serving through the {engine.session.backend!r} backend")
     for i in range(args.requests):
         engine.submit([1 + i, 2, 3] + list(range(4, 4 + i % 5)),
                       max_tokens=args.max_tokens)

@@ -22,7 +22,7 @@ from repro.config import MeshConfig, TrainConfig
 from repro.configs import ALL_ARCHS, get_config
 from repro.data.pipeline import DataConfig
 from repro.launch.mesh import make_mesh
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.step import (batch_pspec, build_train_step, init_train_state,
                               state_pspecs)
 from repro.train.trainer import Trainer
@@ -49,7 +49,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    model = get_model(cfg)
+    model = build_model(cfg)
     tc = TrainConfig(global_batch=args.global_batch, seq_len=args.seq_len,
                      lr=args.lr, optimizer=args.optimizer,
                      microbatches=args.microbatches, remat=args.remat,

@@ -1,1 +1,8 @@
-from .api import Model, get_model  # noqa: F401
+from .api import Model, build_model, get_model  # noqa: F401
+from .sessions import (  # noqa: F401
+    FAMILY_BACKENDS,
+    InferenceSession,
+    SessionSpec,
+    default_backend,
+    make_session,
+)

@@ -1,5 +1,16 @@
 """Uniform Model protocol over all families.
 
+Two surfaces live here (DESIGN.md §5/§7):
+
+* :class:`Model` — the functional train/eval protocol (``init`` /
+  ``forward`` / ``head_weight``) plus the *single-sequence* ``init_cache`` /
+  ``prefill`` / ``decode_step`` path.  The latter is the one-request-at-a-
+  time reference that the serving fuzz suite checks the engine against.
+* The typed serving surface — :class:`~repro.models.sessions.InferenceSession`
+  state backends built by :func:`repro.models.sessions.make_session` — is
+  what ``serve.engine.Engine`` consumes.  Paged/ring/recurrent capability is
+  declared per family there; it is **not** probed off this protocol anymore.
+
 ``batch`` convention:
   {"tokens": (B,S) int32}                              LM families
   {"tokens": ..., "positions": (3,B,S) int32}          M-RoPE (qwen2-vl)
@@ -8,6 +19,7 @@ Decode batches carry tokens of shape (B,1) plus scalar ``pos``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -27,12 +39,6 @@ class Model:
     init_cache: Callable[..., Any]
     prefill: Callable[..., tuple[jax.Array, Any]]
     decode_step: Callable[..., tuple[jax.Array, Any]]
-    # paged-KV serving path (DESIGN.md §6) — attention families only; None
-    # for the stateful recurrences (griffin/rwkv) and enc-dec, whose ring /
-    # state caches are already O(1) per token.
-    init_paged_cache: Callable[..., Any] | None = None
-    prefill_paged_chunk: Callable[..., tuple[jax.Array, Any]] | None = None
-    decode_step_paged: Callable[..., tuple[jax.Array, Any]] | None = None
 
 
 def _lm_adapter(mod, cfg: ModelConfig) -> Model:
@@ -49,18 +55,6 @@ def _lm_adapter(mod, cfg: ModelConfig) -> Model:
         return mod.decode_step(params, cfg, cache, batch["tokens"], pos,
                                positions=batch.get("positions"))
 
-    paged = {}
-    if hasattr(mod, "init_paged_cache"):
-        paged = dict(
-            init_paged_cache=lambda num_blocks, block_size, dtype=jnp.bfloat16:
-                mod.init_paged_cache(cfg, num_blocks, block_size, dtype),
-            prefill_paged_chunk=lambda params, caches, batch, bt, positions:
-                mod.prefill_paged_chunk(params, cfg, caches, batch["tokens"],
-                                        bt, positions),
-            decode_step_paged=lambda params, caches, batch, bt, positions:
-                mod.decode_step_paged(params, cfg, caches, batch["tokens"],
-                                      bt, positions),
-        )
     return Model(
         cfg=cfg,
         init=lambda key: mod.init_lm(key, cfg),
@@ -69,7 +63,6 @@ def _lm_adapter(mod, cfg: ModelConfig) -> Model:
         init_cache=lambda batch, max_len, dtype=jnp.bfloat16: mod.init_cache(cfg, batch, max_len, dtype),
         prefill=prefill_fn,
         decode_step=decode_fn,
-        **paged,
     )
 
 
@@ -96,7 +89,8 @@ def _whisper_adapter(cfg: ModelConfig) -> Model:
     )
 
 
-def get_model(cfg: ModelConfig) -> Model:
+def build_model(cfg: ModelConfig) -> Model:
+    """Canonical Model constructor (train/eval + single-sequence reference)."""
     fam = cfg.family
     if fam in ("dense", "moe"):
         return _lm_adapter(transformer, cfg)
@@ -107,3 +101,16 @@ def get_model(cfg: ModelConfig) -> Model:
     if fam == "encdec":
         return _whisper_adapter(cfg)
     raise ValueError(f"unknown family {fam}")
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    """Deprecated alias of :func:`build_model`.
+
+    Serving callers that used to probe ``model.init_paged_cache`` should go
+    through :func:`repro.models.sessions.make_session`, which declares each
+    family's state-backend capabilities explicitly.
+    """
+    warnings.warn("get_model() is deprecated: use build_model() (train/eval) "
+                  "or models.sessions.make_session() (serving)",
+                  DeprecationWarning, stacklevel=2)
+    return build_model(cfg)

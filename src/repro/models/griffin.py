@@ -135,17 +135,27 @@ def causal_conv1d(p, u, conv_state=None):
     return y, u_pad[:, -(cw - 1):]
 
 
-def rg_lru(p, specs, u, h0, compute_dtype):
+def rg_lru(p, specs, u, h0, compute_dtype, mask=None):
     """u: (B,S,W); h0: (B,W) f32.  Returns h (B,S,W), h_last (B,W) f32.
 
     Gate math runs in f32; the associative scan itself carries
     ``compute_dtype`` operands (Griffin trains in bf16 on TPU — halves the
-    scan's memory traffic, hillclimb-2 iteration 3)."""
+    scan's memory traffic, hillclimb-2 iteration 3).
+
+    ``mask`` (B,S) f32 marks padding steps with 0: a masked step has a=1 and
+    no input contribution, so the state passes through untouched (the
+    serving session's ragged chunked prefill).  Real steps multiply by 1.0 —
+    bitwise identical to the unmasked path.
+    """
     r = jax.nn.sigmoid(apply_linear(p["gate_a"], u, specs["gate_a"], compute_dtype).astype(jnp.float32))
     i = jax.nn.sigmoid(apply_linear(p["gate_x"], u, specs["gate_x"], compute_dtype).astype(jnp.float32))
     log_a = -C_RGLRU * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    if mask is not None:
+        log_a = log_a * mask[:, :, None]  # pads: log a = 0 -> a = 1
     a = jnp.exp(log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32))
+    if mask is not None:
+        gated = gated * mask[:, :, None]  # pads contribute nothing
     gated = gated.at[:, 0].add(a[:, 0] * h0)
 
     def combine(e1, e2):
@@ -401,6 +411,149 @@ def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bf
     x = apply_norm(params["final_norm"], x, cfg)
     logits = unembed(x[:, -1:], head_weight(params, cfg).T, compute_dtype)[:, 0]
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Session serving path (DESIGN.md §7): position-addressed, ragged-batch
+# steps over a constant-size per-slot state — RG-LRU h + conv tails for the
+# recurrent blocks, per-slot windowed K/V rings for the attention blocks.
+# One function serves batched chunked prefill (S = chunk, tail-padded with
+# position -1) and ragged decode (S = 1, per-sequence positions).
+# ---------------------------------------------------------------------------
+def init_session_state(cfg: ModelConfig, batch: int, max_len: int, chunk: int,
+                       cache_dtype=jnp.float32):
+    from .transformer import ring_width
+
+    w = cfg.lru_width or cfg.d_model
+    wr = ring_width(cfg, max_len, chunk)
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+
+    def rec_state(lead):
+        return {"h": jnp.zeros(lead + (batch, w), jnp.float32),
+                "conv": jnp.zeros(lead + (batch, cfg.conv_width - 1, w), cache_dtype)}
+
+    def attn_state(lead):
+        return {"k": jnp.zeros(lead + (batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+                "v": jnp.zeros(lead + (batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+                "pos": jnp.full(lead + (batch, wr), -1, jnp.int32)}
+
+    out: dict[str, Any] = {"tail": [rec_state(()) if k == "rec" else attn_state(())
+                                    for k in tail]}
+    if n_groups:
+        out["groups"] = {
+            f"l{i}_{kind}": (rec_state((n_groups,)) if kind == "rec"
+                             else attn_state((n_groups,)))
+            for i, kind in enumerate(pat)
+        }
+    return out
+
+
+def _conv_state_masked(conv0, u, mask):
+    """Last ``cw-1`` *real* conv inputs per row (padding is tail-only).
+
+    conv0: (B, cw-1, W) previous inputs; u: (B, S, W) this call's inputs;
+    mask: (B, S) f32.  A row with L real tokens keeps inputs ending at its
+    L-th token; L = 0 keeps ``conv0`` untouched.
+    """
+    full = jnp.concatenate([conv0.astype(u.dtype), u], axis=1)
+    n_real = mask.sum(axis=1).astype(jnp.int32)  # (B,)
+    idx = n_real[:, None] + jnp.arange(conv0.shape[1], dtype=jnp.int32)[None, :]
+    return jnp.take_along_axis(full, idx[:, :, None], axis=1)
+
+
+def rec_block_session(p, specs, cfg: ModelConfig, x, state, mask, compute_dtype):
+    """Position-addressed recurrent block: prefill chunk or decode step.
+
+    x: (B,S,D); state: {"h": (B,W) f32, "conv": (B,cw-1,W)}; mask: (B,S) f32
+    (0 = padding step — the state passes through untouched).
+    """
+    hid = apply_norm(p["ln1"], x, cfg)
+    u = apply_linear(p["in_x"], hid, specs["in_x"], compute_dtype)
+    g = jax.nn.gelu(apply_linear(p["in_g"], hid, specs["in_g"], compute_dtype).astype(jnp.float32), approximate=True)
+    u_conv, _ = causal_conv1d(p, u, state["conv"])
+    h, h_last = rg_lru(p, specs, u_conv, state["h"].astype(jnp.float32),
+                       compute_dtype, mask=mask)
+    y = (h.astype(compute_dtype) * g.astype(compute_dtype))
+    y = apply_linear(p["out"], y, specs["out"], compute_dtype,
+                     residual=x).astype(x.dtype)
+    hid = apply_norm(p["ln2"], y, cfg)
+    y = apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype,
+                  residual=y).astype(y.dtype)
+    new_conv = _conv_state_masked(state["conv"], u, mask)
+    return y, {"h": h_last, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+def attn_block_session(p, aspecs, cfg: ModelConfig, x, cache, rope_cs, positions,
+                       compute_dtype):
+    """Windowed attention block over a per-slot ring (ragged positions)."""
+    from .transformer import attn_ring
+
+    hid = apply_norm(p["ln1"], x, cfg)
+    a, new_cache = attn_ring(p, aspecs, cfg, hid, rope_cs, cache, positions,
+                             compute_dtype, residual=x)
+    y = a.astype(x.dtype)
+    hid = apply_norm(p["ln2"], y, cfg)
+    y = apply_mlp(p["mlp"], hid, aspecs.mlp_d(), cfg, compute_dtype,
+                  residual=y).astype(y.dtype)
+    return y, new_cache
+
+
+def _session_stack(params, cfg: ModelConfig, state, x, positions, compute_dtype):
+    from .transformer import _paged_rope
+
+    mask = (positions >= 0).astype(jnp.float32)
+    rope_cs = _paged_rope(cfg, positions)
+    n_groups, tail = pattern_plan(cfg)
+    pat = _pat(cfg)
+    rspecs, aspecs = rec_specs(cfg, True), make_block_specs(cfg, True)
+
+    def group_body(carry, xs):
+        h = carry
+        gp, gs = xs
+        new_gs = {}
+        for i, kind in enumerate(pat):
+            key = f"l{i}_{kind}"
+            if kind == "rec":
+                h, ns = rec_block_session(gp[key], rspecs, cfg, h, gs[key],
+                                          mask, compute_dtype)
+            else:
+                h, ns = attn_block_session(gp[key], aspecs, cfg, h, gs[key],
+                                           rope_cs, positions, compute_dtype)
+            new_gs[key] = ns
+        return h, new_gs
+
+    new_state: dict[str, Any] = {"tail": []}
+    if n_groups:
+        x, new_state["groups"] = jax.lax.scan(group_body, x,
+                                              (params["groups"], state["groups"]))
+    for (kind, p_), s_ in zip(zip(tail, params.get("tail", [])), state["tail"]):
+        if kind == "rec":
+            x, ns = rec_block_session(p_, rspecs, cfg, x, s_, mask, compute_dtype)
+        else:
+            x, ns = attn_block_session(p_, aspecs, cfg, x, s_, rope_cs,
+                                       positions, compute_dtype)
+        new_state["tail"].append(ns)
+    return apply_norm(params["final_norm"], x, cfg), new_state
+
+
+def prefill_session_chunk(params, cfg: ModelConfig, state, tokens, positions):
+    """One chunk of batched prefill.  tokens: (B,C); positions: (B,C)
+    absolute (``-1`` = padding).  Returns logits (B,C,V) f32 + new state."""
+    compute_dtype = dt(cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype) * math.sqrt(cfg.d_model)
+    x, new_state = _session_stack(params, cfg, state, x,
+                                  positions.astype(jnp.int32), compute_dtype)
+    logits = unembed(x, head_weight(params, cfg).T, compute_dtype)
+    return logits, new_state
+
+
+def decode_session_step(params, cfg: ModelConfig, state, tokens, positions):
+    """One ragged decode tick.  tokens: (B,1); positions: (B,) (``-1`` =
+    inactive row).  Returns logits (B,V) f32 + new state."""
+    logits, new_state = prefill_session_chunk(params, cfg, state, tokens,
+                                              positions[:, None])
+    return logits[:, 0], new_state
 
 
 def specs_tree(cfg: ModelConfig):

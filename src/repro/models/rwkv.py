@@ -16,7 +16,6 @@ sequential oracle); decode is the one-step update.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -212,11 +211,25 @@ def _wkv_chunked(r, k, v, w, u, state0, chunk=WKV_CHUNK):
     return y.reshape(b, s, h, hd), state
 
 
+def _last_real(x_prev, x, mask):
+    """Last *real* token of the chunk per row (padding is tail-only); rows
+    with no real tokens keep ``x_prev``.  x_prev: (B,1,D); x: (B,S,D);
+    mask: (B,S) bool."""
+    full = jnp.concatenate([x_prev, x], axis=1)
+    n_real = mask.sum(axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(full, n_real[:, None, None], axis=1)
+
+
 def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
-             residual=None):
+             residual=None, mask=None):
     """x: (B,S,D); x_prev: (B,1,D) last token of previous chunk (zeros at t=0);
     state0: (B,H,hd,hd).  Returns (y, last_x, new_state).  ``residual`` (the
     block skip) fuses into the out-projection's epilogue (TTDLinear-Res).
+
+    ``mask`` (B,S) bool marks padding steps False (serving's ragged chunked
+    prefill): a masked step has decay 1 and k = 0, so the wkv state passes
+    through untouched, and the token-shift state keeps the last *real*
+    token.  Real steps are bitwise identical to the unmasked path.
 
     The wkv recurrence scans over time, so the seq dim must be LOCAL during
     the scan; r/k/v/w are resharded seq→heads around it (batch-only
@@ -232,6 +245,10 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
     v = apply_linear(p["tm"]["v"], mixed["v"], specs["tm"]["v"], compute_dtype)
     g = jax.nn.silu(apply_linear(p["tm"]["g"], mixed["g"], specs["tm"]["g"], compute_dtype).astype(jnp.float32))
     w = _decay(p, mixed["w"], compute_dtype)
+    if mask is not None:
+        m3 = mask[:, :, None]
+        k = jnp.where(m3, k, 0.0)  # pads write nothing into the state
+        w = jnp.where(m3, w, 1.0)  # ...and decay nothing away
 
     def to_heads(t):
         t = constrain(t, BATCH, None, None)  # hop 1: gather seq
@@ -249,10 +266,11 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
     y = y * g.astype(compute_dtype)  # gate is token-sharded; multiply after hop
     y = apply_linear(p["tm"]["o"], y, specs["tm"]["o"], compute_dtype,
                      residual=residual)
-    return y, x[:, -1:], state
+    last_x = x[:, -1:] if mask is None else _last_real(x_prev, x, mask)
+    return y, last_x, state
 
 
-def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype):
+def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype, mask=None):
     # relu² rides the key projection's fused epilogue; the residual can't
     # fuse into cm_value because the r-gate multiplies its output first.
     shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
@@ -267,20 +285,22 @@ def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype):
         k = constrain(k, BATCH, None, "model")
     kv = apply_linear(p["cm"]["v"], k, specs["cm"]["v"], compute_dtype)
     rgate = jax.nn.sigmoid(apply_linear(p["cm"]["r"], xr, specs["cm"]["r"], compute_dtype).astype(jnp.float32))
-    return (rgate * kv.astype(jnp.float32)).astype(compute_dtype), x[:, -1:]
+    last_x = x[:, -1:] if mask is None else _last_real(x_prev, x, mask)
+    return (rgate * kv.astype(jnp.float32)).astype(compute_dtype), last_x
 
 
 # ---------------------------------------------------------------------------
 # Blocks / model
 # ---------------------------------------------------------------------------
-def apply_block(p, specs, cfg: ModelConfig, x, state, compute_dtype):
+def apply_block(p, specs, cfg: ModelConfig, x, state, compute_dtype, mask=None):
     """state: {"wkv": (B,H,hd,hd), "x_tm": (B,1,D), "x_cm": (B,1,D)}."""
     h = apply_norm(p["ln1"], x, cfg)
     y, last_tm, wkv = time_mix(p, specs, cfg, h, state["x_tm"], state["wkv"],
-                               compute_dtype, residual=x)
+                               compute_dtype, residual=x, mask=mask)
     x = constrain(y.astype(x.dtype), BATCH, None, None)
     h = apply_norm(p["ln2"], x, cfg)
-    y, last_cm = channel_mix(p, specs, cfg, h, state["x_cm"], compute_dtype)
+    y, last_cm = channel_mix(p, specs, cfg, h, state["x_cm"], compute_dtype,
+                             mask=mask)
     x = x + y.astype(x.dtype)
     x = constrain(x, BATCH, None, None)
     return x, {"wkv": wkv, "x_tm": last_tm, "x_cm": last_cm}
@@ -296,7 +316,7 @@ def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
 
 
 def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
-            state=None, return_state=False):
+            state=None, return_state=False, mask=None):
     compute_dtype = dt(cfg.compute_dtype)
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, compute_dtype)
@@ -307,7 +327,8 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
 
     def body(carry, xs):
         layer_params, layer_state = xs
-        y, new_state = apply_block(layer_params, specs, cfg, carry, layer_state, compute_dtype)
+        y, new_state = apply_block(layer_params, specs, cfg, carry, layer_state,
+                                   compute_dtype, mask=mask)
         return y, new_state
 
     f = remat_wrap(body, remat)
@@ -346,6 +367,36 @@ def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bf
     logits = unembed(x[:, -1:], head_weight(params, cfg).T, dt(cfg.compute_dtype))[:, 0]
     ref = init_state(cfg, tokens.shape[0], cache_dtype)
     return logits, jax.tree.map(lambda a, b: a.astype(b.dtype), new_state, ref)
+
+
+# ---------------------------------------------------------------------------
+# Session serving path (DESIGN.md §7).  RWKV is attention-free: positions
+# only carry the ragged-batch liveness convention (-1 = padding/inactive),
+# which maps onto the masked wkv/token-shift updates above.  One function
+# serves batched chunked prefill (S = chunk) and ragged decode (S = 1).
+# ---------------------------------------------------------------------------
+def init_session_state(cfg: ModelConfig, batch: int, cache_dtype=jnp.float32):
+    return init_state(cfg, batch, cache_dtype)
+
+
+def prefill_session_chunk(params, cfg: ModelConfig, state, tokens, positions):
+    """tokens: (B,C); positions: (B,C), ``-1`` = padding.  Returns logits
+    (B,C,V) f32 and the updated state."""
+    mask = positions >= 0
+    st = jax.tree.map(
+        lambda a: a.astype(jnp.float32) if a.dtype != jnp.int32 else a, state)
+    x, new_state = forward(params, cfg, tokens, state=st, return_state=True,
+                           mask=mask)
+    logits = unembed(x, head_weight(params, cfg).T, dt(cfg.compute_dtype))
+    new_state = jax.tree.map(lambda a, b: a.astype(b.dtype), new_state, state)
+    return logits, new_state
+
+
+def decode_session_step(params, cfg: ModelConfig, state, tokens, positions):
+    """tokens: (B,1); positions: (B,), ``-1`` = inactive row."""
+    logits, new_state = prefill_session_chunk(params, cfg, state, tokens,
+                                              positions[:, None])
+    return logits[:, 0], new_state
 
 
 def specs_tree(cfg: ModelConfig):

@@ -31,6 +31,7 @@ from .modules import (
     apply_norm,
     apply_rope,
     attention_dense,
+    attention_ragged,
     dt,
     embed_lookup,
     flash_attention,
@@ -42,6 +43,7 @@ from .modules import (
     mlp_specs,
     paged_kv_update,
     remat_wrap,
+    ring_kv_update,
     rope_angles,
     stack_init,
     unembed,
@@ -500,6 +502,114 @@ def prefill_paged_chunk(params, cfg: ModelConfig, caches, tokens, block_tables,
     x, new_caches = _paged_stack(params, cfg, caches, x, rope_cs, block_tables,
                                  positions.astype(jnp.int32), compute_dtype)
     return logits_from_hidden(params, cfg, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Ring-cache serving path (session API, DESIGN.md §7).  Same position
+# conventions as the paged path — per-sequence absolute positions, ``-1`` =
+# inactive — but K/V live in per-slot rings of ``window + chunk`` entries
+# instead of shared block pools.  This is the constant-footprint backend for
+# sliding-window attention (paged block pools cannot express SWA eviction).
+# ---------------------------------------------------------------------------
+def ring_width(cfg: ModelConfig, max_len: int, chunk: int) -> int:
+    """Per-slot ring entries: the visible window plus the widest same-call
+    write (so a chunk write never evicts a key still visible to its own
+    earliest query); full attention keeps the whole ``max_len``."""
+    if cfg.window:
+        return min(cfg.window, max_len) + chunk
+    return max_len
+
+
+def init_ring_cache(cfg: ModelConfig, batch: int, max_len: int, chunk: int,
+                    cache_dtype=jnp.bfloat16):
+    """Stacked per-layer per-slot ring caches with per-sequence positions."""
+    wr = ring_width(cfg, max_len, chunk)
+
+    def one(n):
+        return {
+            "k": jnp.zeros((n, batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+            "v": jnp.zeros((n, batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+            "pos": jnp.full((n, batch, wr), -1, jnp.int32),
+        }
+
+    return [one(n) for n, _ in segment_plan(cfg)]
+
+
+def attn_ring(params, specs, cfg: ModelConfig, x, rope_cs, cache, positions,
+              compute_dtype, residual=None):
+    """Attention against a per-slot ring cache (write-then-attend).
+
+    cache: one layer's ``{"k","v","pos"}`` rings; positions: (B, S) absolute
+    positions (``-1`` = padding, write dropped / query masked).
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
+    new_cache = ring_kv_update(cache, k, v, positions)
+    o = attention_ragged(q, new_cache["k"], new_cache["v"], qpos=positions,
+                         kpos=new_cache["pos"], causal=True, window=cfg.window)
+    o = constrain(o.astype(compute_dtype), BATCH, None, "model", None)
+    o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
+                     specs.attn_d()["wo"], compute_dtype, residual=residual)
+    return o, new_cache
+
+
+def _ring_stack(params, cfg: ModelConfig, caches, x, rope_cs, positions,
+                compute_dtype):
+    new_caches = []
+    for seg_params, seg_cache, (n, ttd_on) in zip(params["segments"], caches,
+                                                  segment_plan(cfg)):
+        specs = make_block_specs(cfg, ttd_on)
+
+        def body(carry, xs, specs=specs):
+            layer_params, layer_cache = xs
+            h = apply_norm(layer_params["ln1"], carry, cfg)
+            a, new_cache = attn_ring(layer_params, specs, cfg, h, rope_cs,
+                                     layer_cache, positions, compute_dtype,
+                                     residual=carry)
+            y = constrain(a.astype(carry.dtype), BATCH, "model", None)
+            h = apply_norm(layer_params["ln2"], y, cfg)
+            if specs.moe is not None:
+                m, _ = apply_moe(layer_params["moe"], h, specs.moe, cfg, compute_dtype)
+                y = y + m.astype(y.dtype)
+            else:
+                y = apply_mlp(layer_params["mlp"], h, specs.mlp_d(), cfg,
+                              compute_dtype, residual=y).astype(y.dtype)
+            return constrain(y, BATCH, "model", None), new_cache
+
+        x, new_cache = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(new_cache)
+    return apply_norm(params["final_norm"], x, cfg), new_caches
+
+
+def prefill_ring_chunk(params, cfg: ModelConfig, caches, tokens, positions):
+    """One chunk of batched prefill into per-slot rings.
+
+    tokens: (B, C); positions: (B, C) absolute (``-1`` = padding).  Returns
+    logits (B, C, V) f32 for every chunk position and the updated caches.
+    """
+    compute_dtype = dt(cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, "model", None)
+    rope_cs = _paged_rope(cfg, positions.astype(jnp.int32))
+    x, new_caches = _ring_stack(params, cfg, caches, x, rope_cs,
+                                positions.astype(jnp.int32), compute_dtype)
+    return logits_from_hidden(params, cfg, x), new_caches
+
+
+def decode_step_ring(params, cfg: ModelConfig, caches, tokens, positions):
+    """One ragged decode tick against per-slot rings.
+
+    tokens: (B, 1); positions: (B,) absolute position of each new token
+    (``-1`` = inactive row).  Returns logits (B, V) f32 and updated caches.
+    """
+    compute_dtype = dt(cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = constrain(x, BATCH, None, None)
+    pos2 = positions[:, None].astype(jnp.int32)
+    rope_cs = _paged_rope(cfg, pos2)
+    x, new_caches = _ring_stack(params, cfg, caches, x, rope_cs, pos2,
+                                compute_dtype)
+    return logits_from_hidden(params, cfg, x)[:, 0], new_caches
 
 
 # ---------------------------------------------------------------------------

@@ -9,8 +9,6 @@ TTD applies to attn-O and MLP linears of both stacks.
 """
 from __future__ import annotations
 
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -18,10 +16,12 @@ import jax.numpy as jnp
 from ..config import ModelConfig
 from ..dist import constrain
 from ..dist.api import BATCH
+from ..kernels import dispatch
+from ..kernels import ref as kernels_ref
 from .modules import (
     apply_linear, apply_mlp, apply_norm, attention_dense, dt, embed_lookup,
     flash_attention, init_embed, init_linear, init_mlp, init_norm, linear_spec,
-    mlp_specs, remat_wrap, stack_init, unembed,
+    mlp_specs, paged_kv_update, remat_wrap, stack_init, unembed,
 )
 from .transformer import _ring_from_prefill
 
@@ -284,6 +284,134 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, positions=None):
     x = apply_norm(params["final_norm"], x, cfg)
     logits = unembed(x[:, 0:1], params["embed"]["table"], compute_dtype)[:, 0]
     return logits, {"self": new_self, "cross": caches["cross"]}
+
+
+# ---------------------------------------------------------------------------
+# Session serving path (DESIGN.md §7): paged-KV decoder self-attention +
+# per-slot encoder cross-attention context riding in the state pytree.
+# The decoder's learned positions are gathered per sequence, so ragged
+# batches decode in one call like every other family.
+# ---------------------------------------------------------------------------
+def init_session_state(cfg: ModelConfig, batch: int, num_blocks: int,
+                       block_size: int, cache_dtype=jnp.float32):
+    """{"self": paged K/V pools, "cross": per-slot encoder-context K/V}."""
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    self_c = {"k": jnp.zeros(shape, cache_dtype), "v": jnp.zeros(shape, cache_dtype)}
+    if cache_dtype == jnp.int8:
+        self_c["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        self_c["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+    ctx = (cfg.n_layers, batch, cfg.enc_len, cfg.n_heads, cfg.head_dim)
+    return {
+        "self": self_c,
+        "cross": {"k": jnp.zeros(ctx, jnp.float32), "v": jnp.zeros(ctx, jnp.float32)},
+    }
+
+
+def encode_ctx(params, cfg: ModelConfig, enc_frames):
+    """Run the encoder and project per-decoder-layer cross K/V.
+
+    enc_frames: (B, T_enc, D) -> {"k","v"}: (n_layers, B, T_enc, H, Dh) f32.
+    Computed once per admitted request and scattered into the session state
+    (recompute-style preemption simply reruns this on re-admission).
+    """
+    compute_dtype = dt(cfg.compute_dtype)
+    enc_out = encode(params, cfg, enc_frames, compute_dtype)
+    aspecs = attn_specs(cfg)
+
+    def body(_, p):
+        xk = _heads(cfg, apply_linear(p["xattn"]["wk"], enc_out, aspecs["wk"], compute_dtype))
+        xv = _heads(cfg, apply_linear(p["xattn"]["wv"], enc_out, aspecs["wv"], compute_dtype))
+        return None, (xk.astype(jnp.float32), xv.astype(jnp.float32))
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec_blocks"])
+    return {"k": ks, "v": vs}
+
+
+def _self_attn_paged(p, aspecs, cfg: ModelConfig, x, cache, block_tables,
+                     positions, compute_dtype, residual=None):
+    """Decoder self-attention against the paged block pool (one layer)."""
+    b, s, _ = x.shape
+    q = _heads(cfg, apply_linear(p["wq"], x, aspecs["wq"], compute_dtype))
+    k = _heads(cfg, apply_linear(p["wk"], x, aspecs["wk"], compute_dtype))
+    v = _heads(cfg, apply_linear(p["wv"], x, aspecs["wv"], compute_dtype))
+    new_cache = paged_kv_update(cache, k, v, block_tables, positions)
+    if s == 1:
+        o = dispatch.paged_attention(q[:, 0], new_cache, block_tables,
+                                     positions[:, 0])[:, None]
+    else:
+        o = kernels_ref.paged_attention(q, new_cache, block_tables, positions)
+    o = o.astype(compute_dtype).reshape(b, s, cfg.q_dim)
+    y = apply_linear(p["wo"], o, aspecs["wo"], compute_dtype, residual=residual)
+    return y, new_cache
+
+
+def _cross_attn_ctx(p, aspecs, cfg: ModelConfig, x, ck, cv, compute_dtype,
+                    residual=None):
+    """Cross-attention against the per-slot encoder context (one layer)."""
+    b, s, _ = x.shape
+    q = _heads(cfg, apply_linear(p["wq"], x, aspecs["wq"], compute_dtype))
+    kpos = jnp.arange(ck.shape[1], dtype=jnp.int32)
+    o = attention_dense(q, ck, cv, qpos=jnp.arange(s, dtype=jnp.int32),
+                        kpos=kpos, causal=False)
+    y = apply_linear(p["wo"], o.reshape(b, s, cfg.q_dim), aspecs["wo"],
+                     compute_dtype, residual=residual)
+    return y
+
+
+def _session_stack(params, cfg: ModelConfig, state, x, block_tables, positions,
+                   compute_dtype):
+    aspecs, mspecs = attn_specs(cfg), mlp_specs(cfg, True)
+
+    def body(carry, xs):
+        p, c_self, ck, cv = xs
+        h = apply_norm(p["ln1"], carry, cfg)
+        a, ns = _self_attn_paged(p["attn"], aspecs, cfg, h, c_self, block_tables,
+                                 positions, compute_dtype, residual=carry)
+        y = a.astype(carry.dtype)
+        h = apply_norm(p["ln_x"], y, cfg)
+        a = _cross_attn_ctx(p["xattn"], aspecs, cfg, h, ck, cv, compute_dtype,
+                            residual=y)
+        y = a.astype(y.dtype)
+        h = apply_norm(p["ln2"], y, cfg)
+        y = apply_mlp(p["mlp"], h, mspecs, cfg, compute_dtype,
+                      residual=y).astype(y.dtype)
+        return y, ns
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_blocks"], state["self"],
+                  state["cross"]["k"], state["cross"]["v"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, {"self": new_self, "cross": state["cross"]}
+
+
+def _embed_positions(params, cfg: ModelConfig, tokens, positions, compute_dtype):
+    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    pos_emb = jnp.take(params["dec_pos"], jnp.maximum(positions, 0),
+                       axis=0).astype(compute_dtype)
+    return x + pos_emb
+
+
+def prefill_session_chunk(params, cfg: ModelConfig, state, tokens, block_tables,
+                          positions):
+    """One chunk of batched prefill.  tokens: (B,C); positions: (B,C)
+    (``-1`` = padding).  Returns logits (B,C,V) f32 and the new state."""
+    compute_dtype = dt(cfg.compute_dtype)
+    positions = positions.astype(jnp.int32)
+    x = _embed_positions(params, cfg, tokens, positions, compute_dtype)
+    x, new_state = _session_stack(params, cfg, state, x, block_tables,
+                                  positions, compute_dtype)
+    return unembed(x, params["embed"]["table"], compute_dtype), new_state
+
+
+def decode_session_step(params, cfg: ModelConfig, state, tokens, block_tables,
+                        positions):
+    """One ragged decode tick.  tokens: (B,1); positions: (B,)."""
+    compute_dtype = dt(cfg.compute_dtype)
+    pos2 = positions[:, None].astype(jnp.int32)
+    x = _embed_positions(params, cfg, tokens, pos2, compute_dtype)
+    x, new_state = _session_stack(params, cfg, state, x, block_tables, pos2,
+                                  compute_dtype)
+    return unembed(x, params["embed"]["table"], compute_dtype)[:, 0], new_state
 
 
 def specs_tree(cfg: ModelConfig):

@@ -1,1 +1,2 @@
-from .steps import cache_pspecs, serve_config_of  # noqa: F401
+from .engine import Engine, PagedEngine, Request  # noqa: F401
+from .steps import cache_pspecs, serve_config_of, session_step_fns  # noqa: F401

@@ -1,27 +1,27 @@
-"""Continuous-batching serving engines.
+"""Continuous-batching serving engine over the typed session API.
 
-A Python scheduler drives jitted programs (see ``serve/steps.py``) over a
-fixed decode batch of ``slots``.  Requests join after prefill; every decode
-tick advances all active slots one token; finished sequences (eos or
-max_tokens) free their resources immediately — classic continuous batching.
+One scheduler serves every model family (DESIGN.md §7): a Python loop
+drives the jitted programs built by ``serve.steps.session_step_fns`` from an
+:class:`~repro.models.sessions.InferenceSession` — the family-specific state
+layout (paged K/V blocks, per-slot rings, recurrent state, encoder context)
+is entirely the backend's business.  The scheduler sees one uniform surface:
 
-Two cache disciplines share the scheduler protocol (``submit`` / ``tick`` /
-``run``):
+* ``prefill_chunk(params, state, tokens, positions)`` — rows are decode
+  slots; admitted prompts prefill *batched* in fixed-width chunks while idle
+  slots ride along at position ``-1``.
+* ``decode_step(params, state, tokens, positions)`` — one call per tick
+  regardless of position raggedness (per-sequence positions).
 
-* :class:`Engine` — the per-slot **ring** layout: each slot owns a
-  ``max_len`` ring, prefill is single-sequence with host-side cache surgery,
-  and decode groups slots by position (the jitted decode takes one shared
-  scalar ``pos``).  Simple and correct; kept as the reference
-  implementation the fuzz suite checks the paged engine against.
-* :class:`PagedEngine` — the **paged** layout (DESIGN.md §6): KV memory is a
-  block pool (``serve/kv_cache.py``), admission is block-table-driven
-  (admit while free blocks cover the prompt plus one lookahead token),
-  waiting prompts prefill *batched* in fixed-width chunks, decode is one
-  call per tick regardless of position raggedness (per-sequence positions),
-  and block exhaustion preempts the newest sequence back to the waiting
-  queue (recompute-style: its blocks are freed; emitted tokens are kept and
-  re-prefilled with the prompt on re-admission, so greedy outputs are
-  unchanged).
+Requests join after prefill; every decode tick advances all active slots one
+token; finished sequences free their resources immediately — classic
+continuous batching.  For block-pool backends (``session.uses_blocks``) the
+engine owns a :class:`~repro.serve.kv_cache.BlockManager`: admission is
+FCFS while free blocks cover the prompt plus one lookahead token, tables
+grow on demand each tick, and block exhaustion preempts the newest-admitted
+sequence back to the waiting queue (recompute-style: its blocks are freed;
+emitted tokens are kept and re-prefilled with the prompt on re-admission, so
+greedy outputs are unchanged).  Constant-state backends never preempt —
+their capacity is the slot itself.
 
 First-token latency (``Request.t_first``) is stamped only after
 ``jax.block_until_ready`` on the prefill logits — timing the dispatch
@@ -30,17 +30,24 @@ async backend.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..config import ModelConfig
-from ..models.api import Model
+from ..models.sessions import (
+    InferenceSession,
+    SessionSpec,
+    canonical_cache_dtype,
+    make_session,
+)
 from . import steps
-from .kv_cache import PagedKVCache, blocks_for
+from .kv_cache import BlockManager, blocks_for, pack_block_tables
 
 
 @dataclass
@@ -49,6 +56,7 @@ class Request:
     prompt: list[int]
     max_tokens: int
     eos: int | None = None
+    enc_frames: Any = None  # (T_enc, D) encoder frames (enc-dec families)
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0
@@ -56,48 +64,108 @@ class Request:
     t_done: float = 0.0
 
 
-class EngineBase:
-    """Scheduler protocol + sampling shared by both cache disciplines."""
+class Engine:
+    """Backend-parameterized continuous-batching scheduler.
 
-    def __init__(self, model: Model, params, *, greedy: bool = True,
+    ``model`` may be a :class:`~repro.models.api.Model`, a ``ModelConfig``,
+    or a prebuilt :class:`~repro.models.sessions.InferenceSession`.
+    ``backend=None`` picks the family default (paged for full-attention
+    dense/moe, rings for SWA, recurrent state for griffin/rwkv, encoder
+    context + paged self-attention for whisper); asking for an unsupported
+    backend raises ``NotImplementedError`` naming the family.
+    """
+
+    def __init__(self, model, params, *, slots: int | None = None,
+                 max_len: int | None = None, backend: str | None = None,
+                 block_size: int | None = None, num_blocks: int | None = None,
+                 cache_dtype=None, prefill_batch: int = 2,
+                 prefill_chunk: int | None = None, greedy: bool = True,
                  temperature: float = 1.0, top_k: int = 0, seed: int = 0,
                  kernel_backend: str | None = None):
-        self.model = model
-        self.cfg: ModelConfig = model.cfg
+        geometry = dict(slots=slots, max_len=max_len, block_size=block_size,
+                        num_blocks=num_blocks, cache_dtype=cache_dtype,
+                        prefill_chunk=prefill_chunk, backend=backend)
+        if isinstance(model, InferenceSession):
+            passed = [k for k, v in geometry.items() if v is not None]
+            if passed:
+                raise ValueError(
+                    "a prebuilt InferenceSession fixes the serving geometry; "
+                    f"drop the conflicting kwargs {passed} or pass the "
+                    "config/Model instead")
+            self.session = model
+        else:
+            cfg = getattr(model, "cfg", model)
+            self.session = make_session(cfg, SessionSpec(
+                slots=slots if slots is not None else 4,
+                max_len=max_len if max_len is not None else 512,
+                prefill_chunk=max(1, prefill_chunk if prefill_chunk is not None else 32),
+                block_size=block_size if block_size is not None else 16,
+                num_blocks=num_blocks,
+                cache_dtype=canonical_cache_dtype(
+                    cache_dtype if cache_dtype is not None else "float32")),
+                backend=backend)
+        self.cfg: ModelConfig = self.session.cfg
+        spec = self.session.spec
         self.params = params
+        self.slots = spec.slots
+        self.max_len = spec.max_len
+        self.prefill_batch = max(1, prefill_batch)
+        self.prefill_chunk = spec.prefill_chunk
         self.greedy = greedy
         self.temperature = temperature
         self.top_k = top_k
         self._key = jax.random.PRNGKey(seed)
         self.kernel_backend = kernel_backend  # None -> dispatch policy chain
+
+        self.manager: BlockManager | None = None
+        if self.session.uses_blocks:
+            self.manager = BlockManager(spec.resolved_num_blocks(),
+                                        spec.block_size)
+        self.state = self.session.init_state()
+        self._batch_axis = self._find_batch_axes()
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._next_rid = 0
+        self.slot_req: list[Request | None] = [None] * self.slots
+        self.slot_pos = np.zeros(self.slots, np.int32)  # next position to decode
+        self._admit_order: list[int] = []  # slots, oldest admission first
+        self._prefill, self._decode, self._begin = steps.session_step_fns(
+            self.session, kernel_backend)
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: list[int], max_tokens: int = 32,
-               eos: int | None = None) -> Request:
+               eos: int | None = None, enc_frames=None) -> Request:
         if not prompt:
             raise ValueError("empty prompt")
         if max_tokens < 1:
             raise ValueError("max_tokens must be >= 1")
-        self._validate(prompt, max_tokens)
+        if len(prompt) + 1 > self.max_len:
+            raise ValueError(f"prompt needs {len(prompt) + 1} positions "
+                             f"> max_len {self.max_len}")
+        if self.manager is not None:
+            # a request must be servable *alone* (worst case: everything
+            # else preempted): its total footprint — prompt + generated,
+            # capped by the max_len frontier — must fit the whole pool
+            worst = min(len(prompt) + max_tokens, self.max_len)
+            need = blocks_for(worst, self.manager.block_size)
+            if need > self.manager.num_blocks - 1:
+                raise ValueError(
+                    f"request needs up to {need} blocks but the pool only "
+                    f"has {self.manager.num_blocks - 1}")
         req = Request(self._next_rid, list(prompt), max_tokens, eos,
-                      t_submit=time.time())
+                      enc_frames=enc_frames, t_submit=time.time())
         self._next_rid += 1
         self.queue.append(req)
         return req
 
-    def _validate(self, prompt: list[int], max_tokens: int) -> None:
-        """Subclass hook: reject requests that can never be served."""
-
     def pending(self) -> bool:
-        raise NotImplementedError
+        return bool(self.queue) or any(r is not None for r in self.slot_req)
 
     def tick(self) -> None:
-        """One scheduler step: admit waiting requests, then decode one token
-        for every active sequence."""
-        raise NotImplementedError
+        """One scheduler step: admit waiting requests (batched chunked
+        prefill), then decode one token for every active sequence."""
+        self._admit()
+        self._decode_tick()
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0
@@ -105,6 +173,10 @@ class EngineBase:
             self.tick()
             ticks += 1
         return self.finished
+
+    @property
+    def num_free_blocks(self) -> int | None:
+        return self.manager.num_free if self.manager is not None else None
 
     # -- shared internals -----------------------------------------------------
     def _sample(self, logits) -> int:
@@ -130,267 +202,114 @@ class EngineBase:
             return True
         return False
 
-
-class Engine(EngineBase):
-    """Ring-cache engine (single-sequence prefill + slot-wise cache surgery).
-
-    The KV layout is per-slot rings sized ``max_len``; memory is
-    ``slots × max_len`` regardless of live tokens.  Kept as the simple
-    reference the paged engine is fuzz-tested against.
-    """
-
-    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
-                 cache_dtype=jnp.float32, greedy: bool = True,
-                 temperature: float = 1.0, top_k: int = 0, seed: int = 0,
-                 kernel_backend: str | None = None):
-        super().__init__(model, params, greedy=greedy, temperature=temperature,
-                         top_k=top_k, seed=seed, kernel_backend=kernel_backend)
-        self.slots = slots
-        self.max_len = max_len
-        self.cache = model.init_cache(slots, max_len, cache_dtype)
-        # identify each cache leaf's batch axis structurally (dim sizes like
-        # n_layers can collide with the slot count)
-        sa = jax.eval_shape(lambda: model.init_cache(slots, max_len, cache_dtype))
-        sb = jax.eval_shape(lambda: model.init_cache(slots + 1, max_len, cache_dtype))
-        self._batch_axis = jax.tree.map(
-            lambda a, b: next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
-                               if x != y), -1), sa, sb)
-        self.slot_req: list[Request | None] = [None] * slots
-        self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
-        self._prefill, self._decode = steps.ring_step_fns(
-            model, steps.canonical_cache_dtype(cache_dtype), max_len,
-            kernel_backend)
-
-    def pending(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slot_req)
-
-    def tick(self) -> None:
-        self._admit()
-        self._decode_tick()
-
-    # -- internals ------------------------------------------------------------
-    def _validate(self, prompt: list[int], max_tokens: int) -> None:
-        """The ring holds ``max_len`` positions: a longer prompt would be
-        silently cropped by the slot surgery — reject it up front (mirrors
-        PagedEngine's contract)."""
-        if len(prompt) + 1 > self.max_len:
-            raise ValueError(f"prompt needs {len(prompt) + 1} positions "
-                             f"> max_len {self.max_len}")
-
-    def _admit(self):
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
-                toks = jnp.asarray([req.prompt], jnp.int32)
-                logits, cache1 = self._prefill(self.params, {"tokens": toks})
-                # first-token latency: stamp only after the device finishes
-                jax.block_until_ready(logits)
-                req.t_first = time.time()
-                tok = self._sample(logits[0])
-                if self._emit(req, tok):  # eos on first token / max_tokens=1
-                    continue
-                self._install(s, cache1, len(req.prompt))
-                self.slot_req[s] = req
-                self.slot_pos[s] = len(req.prompt)
-
-    def _install(self, slot: int, cache1, prompt_len: int):
-        """Copy a batch-1 prefill cache into batch slot ``slot``.
-
-        Leaves with a batch dim get slot-surgery (ring dims padded/cropped to
-        the engine's max_len); batchless int32 leaves (position rings, shared
-        across the batch) merge by elementwise max — valid because decode
-        attention masks ``kpos <= qpos`` per query, so a slot lagging behind
-        the shared ring frontier never sees future entries.
-        """
-        def _fit(one, fshape, axis):
-            """Pad/crop every dim after ``axis`` to match fshape."""
-            pads, slices = [], []
-            for d in range(one.ndim):
-                target = fshape[d]
-                diff = target - one.shape[d]
-                pads.append((0, max(diff, 0)))
-                slices.append(slice(0, target))
-            fill = -1 if one.dtype == jnp.int32 else 0
-            return jnp.pad(one, pads, constant_values=fill)[tuple(slices)]
-
-        def upd(full, one, axis):
-            fshape = full.shape
-            if axis >= 0:
-                idx = [slice(None)] * len(fshape)
-                idx[axis] = slice(slot, slot + 1)
-                tgt = list(fshape)
-                tgt[axis] = 1
-                return full.at[tuple(idx)].set(_fit(one, tgt, axis))
-            if full.dtype == jnp.int32:  # shared position rings
-                return jnp.maximum(full, _fit(one, full.shape, 0))
-            return full
-
-        self.cache = jax.tree.map(upd, self.cache, cache1, self._batch_axis)
-
-    def _decode_tick(self):
-        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
-        if not active:
-            return
-        # all active slots share a tick; position is per-slot via pos rings,
-        # we step each active slot one token (batched decode over all slots)
-        toks = np.zeros((self.slots, 1), np.int32)
-        for s in active:
-            toks[s, 0] = self.slot_req[s].out_tokens[-1]
-        # engine-level simplification: one decode_step per distinct position
-        # group (slots admitted together share positions)
-        groups: dict[int, list[int]] = {}
-        for s in active:
-            groups.setdefault(int(self.slot_pos[s]), []).append(s)
-        for pos, slots in groups.items():
-            logits, new_cache = self._decode(self.params, self.cache,
-                                             {"tokens": jnp.asarray(toks)},
-                                             jnp.int32(pos))
-            # keep updates only for slots in this group
-            mask = np.zeros(self.slots, bool)
-            mask[slots] = True
-
-            def sel(new, old, axis):
-                if axis >= 0:
-                    m = jnp.asarray(mask).reshape(
-                        (1,) * axis + (self.slots,) + (1,) * (new.ndim - axis - 1))
-                    return jnp.where(m, new, old)
-                return new  # shared leaves (pos rings) — same for the group
-
-            self.cache = jax.tree.map(sel, new_cache, self.cache, self._batch_axis)
-            for s in slots:
-                req = self.slot_req[s]
-                tok = self._sample(logits[s])
-                self.slot_pos[s] += 1
-                if self._emit(req, tok) or self.slot_pos[s] >= self.max_len - 1:
-                    if not req.done:  # ring frontier hit: force-finish
-                        req.done = True
-                        req.t_done = time.time()
-                        self.finished.append(req)
-                    self.slot_req[s] = None
-
-
-class PagedEngine(EngineBase):
-    """Paged-KV continuous batching: block-table admission, batched chunked
-    prefill, single ragged decode call per tick, preempt-to-waiting.
-
-    ``slots`` is the decode batch width; KV memory is ``num_blocks`` blocks
-    of ``block_size`` tokens shared by all sequences (defaults to full
-    occupancy: every slot can reach ``max_len``).  ``cache_dtype`` may be
-    ``"float32" | "bfloat16" | "float16" | "int8"`` (int8 stores
-    per-(block-slot, head) scales alongside the values; see
-    ``models.transformer.init_paged_cache``).
-    """
-
-    def __init__(self, model: Model, params, *, slots: int = 4, max_len: int = 512,
-                 block_size: int = 16, num_blocks: int | None = None,
-                 cache_dtype="float32", prefill_batch: int = 2,
-                 prefill_chunk: int = 32, greedy: bool = True,
-                 temperature: float = 1.0, top_k: int = 0, seed: int = 0,
-                 kernel_backend: str | None = None):
-        super().__init__(model, params, greedy=greedy, temperature=temperature,
-                         top_k=top_k, seed=seed, kernel_backend=kernel_backend)
-        cfg = model.cfg
-        if model.init_paged_cache is None:
-            raise ValueError(f"family {cfg.family!r} has no paged-cache path")
-        if cfg.window:
-            raise NotImplementedError("paged serving assumes full attention "
-                                      "(window=0); use the ring engine for SWA")
-        if cfg.pos_type not in ("rope", "none"):
-            raise NotImplementedError(
-                f"paged serving supports pos_type rope|none, not {cfg.pos_type!r}")
-        self.slots = slots
-        self.max_len = max_len
-        self.block_size = block_size
-        self.prefill_batch = max(1, prefill_batch)
-        self.prefill_chunk = max(1, prefill_chunk)
-        if num_blocks is None:
-            num_blocks = 1 + slots * blocks_for(max_len, block_size)
-        dtype_name = steps.canonical_cache_dtype(cache_dtype)
-        self.kv = PagedKVCache(model, num_blocks=num_blocks,
-                               block_size=block_size, max_len=max_len,
-                               cache_dtype=steps.CACHE_DTYPES[dtype_name])
-        self.slot_req: list[Request | None] = [None] * slots
-        self.slot_pos = np.zeros(slots, np.int32)  # next position to decode
-        self._admit_order: list[int] = []  # slots, oldest admission first
-        self._prefill_chunk, self._decode = steps.paged_step_fns(
-            model, kernel_backend)
-
-    def pending(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.slot_req)
-
-    def tick(self) -> None:
-        self._admit()
-        self._decode_tick()
-
-    @property
-    def num_free_blocks(self) -> int:
-        return self.kv.num_free
-
-    # -- internals ------------------------------------------------------------
-    def _validate(self, prompt: list[int], max_tokens: int) -> None:
-        """A request must be servable *alone* (worst case: everything else
-        preempted): its total token footprint — prompt + generated, capped by
-        the ``max_len`` frontier — must fit the whole pool.  Rejecting at
-        submit keeps mid-run growth failures recoverable by preemption."""
-        if len(prompt) + 1 > self.max_len:
-            raise ValueError(f"prompt needs {len(prompt) + 1} positions "
-                             f"> max_len {self.max_len}")
-        worst = min(len(prompt) + max_tokens, self.max_len)
-        if blocks_for(worst, self.block_size) > self.kv.num_blocks - 1:
-            raise ValueError(
-                f"request needs up to {blocks_for(worst, self.block_size)} "
-                f"blocks but the pool only has {self.kv.num_blocks - 1}")
     def _seq_tokens(self, req: Request) -> list[int]:
-        """Tokens whose K/V a (re-)admitted request must hold: the prompt
-        plus anything already emitted before a preemption."""
+        """Tokens a (re-)admitted request must prefill: the prompt plus
+        anything already emitted before a preemption."""
         return req.prompt + req.out_tokens
 
+    def _find_batch_axes(self):
+        """Identify each state leaf's slot axis structurally (dim sizes like
+        n_layers can collide with the slot count)."""
+        spec = self.session.spec
+        # pin the block-pool size: the default scales with ``slots``, and a
+        # pool dim that grows with the probe would masquerade as a slot axis
+        bigger = type(self.session)(self.cfg, dataclasses.replace(
+            spec, slots=spec.slots + 1, num_blocks=spec.resolved_num_blocks()))
+        sa = jax.eval_shape(self.session.init_state)
+        sb = jax.eval_shape(bigger.init_state)
+        return jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                               if x != y), -1), sa, sb)
+
+    def _reset_slots(self, slot_ids: list[int]):
+        """Clear per-slot state rows before a new occupant prefills (a stale
+        ring/recurrent state would otherwise leak into the new sequence).
+        Block-pool leaves have no slot axis and are skipped — block ownership
+        already isolates sequences there."""
+        mask = np.zeros(self.slots, bool)
+        mask[slot_ids] = True
+        m = jnp.asarray(mask)
+
+        def upd(path, leaf, axis):
+            name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+            if axis < 0 or name == "block_tables":
+                return leaf
+            mb = m.reshape((1,) * axis + (self.slots,) + (1,) * (leaf.ndim - axis - 1))
+            fill = -1 if leaf.dtype == jnp.int32 else 0
+            return jnp.where(mb, jnp.asarray(fill, leaf.dtype), leaf)
+
+        self.state = jax.tree_util.tree_map_with_path(upd, self.state,
+                                                      self._batch_axis)
+
+    def _sync_tables(self, extra: dict[int, int] | None = None):
+        """Re-pack per-slot block tables into the state (block backends)."""
+        if self.manager is None:
+            return
+        rids: list[int | None] = [r.rid if r is not None else None
+                                  for r in self.slot_req]
+        for s, rid in (extra or {}).items():
+            rids[s] = rid
+        bt = pack_block_tables(self.manager, rids, self.session.spec.table_width())
+        self.state = self.session.with_tables(self.state, bt)
+
+    # -- admission ------------------------------------------------------------
     def _admit(self):
-        """FCFS admission: take waiting requests while a slot is free and the
-        block pool covers their prompt plus one lookahead token, then prefill
-        them together in fixed-width chunks (one jitted program)."""
+        """FCFS admission: take waiting requests while a slot is free and —
+        for block backends — the pool covers their prompt plus one lookahead
+        token, then prefill them together in fixed-width chunks."""
         free_slots = [s for s in range(self.slots) if self.slot_req[s] is None]
         batch: list[tuple[int, Request]] = []
         reserve = 0  # lookahead blocks promised to earlier batch members
         while self.queue and free_slots and len(batch) < self.prefill_batch:
             req = self.queue[0]
             n_tok = len(self._seq_tokens(req))
-            # admission wants the prompt *plus one lookahead token* free —
-            # counting lookahead already reserved by this batch's earlier
-            # members — so a fresh admission doesn't immediately preempt on
-            # its first decode tick
-            need = blocks_for(n_tok + 1, self.block_size)
-            if need + reserve > self.kv.num_free or \
-                    not self.kv.manager.allocate(req.rid, n_tok):
-                break  # head-of-line blocks: keep FCFS order
-            reserve += need - blocks_for(n_tok, self.block_size)
+            if self.manager is not None:
+                # admission wants the prompt *plus one lookahead token* free
+                # — counting lookahead already reserved by this batch's
+                # earlier members — so a fresh admission doesn't immediately
+                # preempt on its first decode tick
+                bs = self.manager.block_size
+                need = blocks_for(n_tok + 1, bs)
+                if need + reserve > self.manager.num_free or \
+                        not self.manager.allocate(req.rid, n_tok):
+                    break  # head-of-line blocks: keep FCFS order
+                reserve += need - blocks_for(n_tok, bs)
             self.queue.pop(0)
             batch.append((free_slots.pop(0), req))
         if not batch:
             return
-        # pad the prompt batch to the fixed prefill width (dummy rows write
-        # only to the null block) so the chunk program has one static shape
-        prompts = [self._seq_tokens(r) for _, r in batch]
-        prompts += [[]] * (self.prefill_batch - len(batch))
-        bt = self.kv.block_table([r.rid for _, r in batch]
-                                 + [None] * (self.prefill_batch - len(batch)))
-        logits, self.kv.data = steps.chunked_prefill(
-            self._prefill_chunk, self.params, self.kv.data, prompts, bt,
+        self._reset_slots([s for s, _ in batch])
+        if self.session.needs_encoder_ctx:
+            for s, req in batch:
+                frames = req.enc_frames
+                if frames is None:
+                    frames = np.zeros((self.cfg.enc_len, self.cfg.d_model),
+                                      np.float32)
+                self.state = self._begin(self.params, self.state, jnp.int32(s),
+                                         jnp.asarray(frames)[None])
+        self._sync_tables(extra={s: req.rid for s, req in batch})
+        prompts: list[list[int] | None] = [None] * self.slots
+        for s, req in batch:
+            prompts[s] = self._seq_tokens(req)
+        logits, self.state = steps.chunked_prefill(
+            self._prefill, self.params, self.state, prompts,
             chunk=self.prefill_chunk)
         # first-token latency: stamp only after the device finishes
         jax.block_until_ready(logits)
         t_ready = time.time()
-        for i, (s, req) in enumerate(batch):
+        for s, req in batch:
             if not req.t_first:
                 req.t_first = t_ready
-            tok = self._sample(logits[i])
+            tok = self._sample(logits[s])
             if self._emit(req, tok):  # eos on first token / max_tokens=1
-                self.kv.manager.free(req.rid)
+                if self.manager is not None:
+                    self.manager.free(req.rid)
                 continue
             self.slot_req[s] = req
-            self.slot_pos[s] = len(prompts[i])
+            self.slot_pos[s] = len(prompts[s])
             self._admit_order.append(s)
 
+    # -- decode / preemption --------------------------------------------------
     def _preempt_newest(self) -> int | None:
         """Free the most recently admitted sequence back to the waiting
         queue's head; returns its slot.  Recompute-style: emitted tokens
@@ -399,7 +318,7 @@ class PagedEngine(EngineBase):
             if self.slot_req[s] is None:
                 continue
             req = self.slot_req[s]
-            self.kv.manager.free(req.rid)
+            self.manager.free(req.rid)
             self.slot_req[s] = None
             self._admit_order.remove(s)
             self.queue.insert(0, req)
@@ -407,21 +326,23 @@ class PagedEngine(EngineBase):
         return None
 
     def _decode_tick(self):
-        # grow each active sequence's table to cover the incoming token,
-        # preempting the newest-admitted sequence on block exhaustion (the
-        # grower itself, if it is the newest — FCFS favors older requests)
-        for s in list(self._admit_order):
-            req = self.slot_req[s]
-            if req is None:
-                continue
-            while not self.kv.manager.ensure(req.rid, int(self.slot_pos[s]) + 1):
-                victim = self._preempt_newest()
-                if victim == s:
-                    break  # the grower was evicted; it retries after re-admission
-                if victim is None:  # unreachable: submit-time capacity check
-                    raise RuntimeError(
-                        f"paged pool too small: sequence {req.rid} alone "
-                        f"cannot grow to {int(self.slot_pos[s]) + 1} tokens")
+        # block backends: grow each active sequence's table to cover the
+        # incoming token, preempting the newest-admitted sequence on block
+        # exhaustion (the grower itself, if it is the newest — FCFS favors
+        # older requests)
+        if self.manager is not None:
+            for s in list(self._admit_order):
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                while not self.manager.ensure(req.rid, int(self.slot_pos[s]) + 1):
+                    victim = self._preempt_newest()
+                    if victim == s:
+                        break  # the grower was evicted; retries on re-admission
+                    if victim is None:  # unreachable: submit-time capacity check
+                        raise RuntimeError(
+                            f"block pool too small: sequence {req.rid} alone "
+                            f"cannot grow to {int(self.slot_pos[s]) + 1} tokens")
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return
@@ -430,20 +351,30 @@ class PagedEngine(EngineBase):
         for s in active:
             toks[s, 0] = self.slot_req[s].out_tokens[-1]
             positions[s] = self.slot_pos[s]
-        bt = self.kv.block_table([self.slot_req[s].rid if self.slot_req[s]
-                                  else None for s in range(self.slots)])
-        logits, self.kv.data = self._decode(
-            self.params, self.kv.data, jnp.asarray(toks), jnp.asarray(bt),
-            jnp.asarray(positions))
+        self._sync_tables()
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(positions))
         for s in active:
             req = self.slot_req[s]
             tok = self._sample(logits[s])
             self.slot_pos[s] += 1
             if self._emit(req, tok) or self.slot_pos[s] >= self.max_len - 1:
-                if not req.done:  # frontier hit: force-finish
+                if not req.done:  # max_len frontier hit: force-finish
                     req.done = True
                     req.t_done = time.time()
                     self.finished.append(req)
-                self.kv.manager.free(req.rid)
+                if self.manager is not None:
+                    self.manager.free(req.rid)
                 self.slot_req[s] = None
                 self._admit_order.remove(s)
+
+
+class PagedEngine(Engine):
+    """Deprecated alias of :class:`Engine`.
+
+    Every family now serves through the unified session scheduler; the old
+    ring-cache reference engine is gone and ``PagedEngine`` simply forwards
+    to :class:`Engine` (whose default backend for full-attention dense/moe
+    is the paged block pool this class used to hard-code).
+    """

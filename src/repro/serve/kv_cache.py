@@ -13,9 +13,10 @@ Two layers:
 * :class:`BlockManager` — pure-Python bookkeeping (free list, block tables,
   live-token accounting).  No jax imports; property-tested in
   ``tests/test_kv_cache.py``.
-* :class:`PagedKVCache` — the device-side K/V pools (one stacked array per
-  scan segment, built by ``models.transformer.init_paged_cache``) plus a
-  :class:`BlockManager` and the host→device block-table packing.
+* :func:`pack_block_tables` — the host→device block-table packing.  The
+  device-side K/V pools themselves ride in the session state pytree
+  (``models.sessions`` paged/encdec backends, DESIGN.md §7); the engine owns
+  one :class:`BlockManager` per block-pool session.
 
 Block 0 is reserved as the **null block**: it is never allocated, and jitted
 steps route padding-token writes (position ``-1``) into it, so fixed-shape
@@ -118,43 +119,16 @@ class BlockManager:
         return blocks
 
 
-class PagedKVCache:
-    """Device K/V block pools + a :class:`BlockManager` + table packing.
+def pack_block_tables(manager: BlockManager, seq_ids: Sequence[int | None],
+                      table_width: int):
+    """(B, table_width) int32 table; ``None`` rows / tail pad with the
+    null block 0."""
+    import numpy as np  # local: BlockManager itself stays numpy/jax-free
 
-    ``data`` is whatever ``model.init_paged_cache`` returns (a list of
-    per-segment dicts with ``k``/``v`` leaves shaped
-    ``(n_layers, num_blocks, block_size, n_kv_heads, head_dim)`` and, for the
-    int8 cache dtype, ``k_scale``/``v_scale`` per-block scale tables shaped
-    ``(n_layers, num_blocks, block_size, n_kv_heads)``).  The engine swaps
-    ``data`` wholesale after every jitted step (functional update).
-    """
-
-    def __init__(self, model, *, num_blocks: int, block_size: int,
-                 max_len: int, cache_dtype="float32"):
-        import numpy as np  # local: BlockManager stays numpy/jax-free
-
-        if model.init_paged_cache is None:
-            raise ValueError(f"{model.cfg.name}: family {model.cfg.family!r} "
-                             "has no paged-cache path")
-        self._np = np
-        self.block_size = block_size
-        self.num_blocks = num_blocks
-        self.table_width = blocks_for(max_len, block_size)
-        self.manager = BlockManager(num_blocks, block_size)
-        self.data = model.init_paged_cache(num_blocks, block_size, cache_dtype)
-
-    @property
-    def num_free(self) -> int:
-        return self.manager.num_free
-
-    def block_table(self, seq_ids: Sequence[int | None]):
-        """(B, table_width) int32 table; ``None`` rows / tail pad with the
-        null block 0."""
-        np = self._np
-        out = np.zeros((len(seq_ids), self.table_width), np.int32)
-        for i, sid in enumerate(seq_ids):
-            if sid is None:
-                continue
-            t = self.manager.table(sid)
-            out[i, :len(t)] = t
-        return out
+    out = np.zeros((len(seq_ids), table_width), np.int32)
+    for i, sid in enumerate(seq_ids):
+        if sid is None:
+            continue
+        t = manager.table(sid)
+        out[i, :len(t)] = t
+    return out

@@ -1,11 +1,14 @@
 """Serving-side step builders, sharding rules, and config transforms.
 
-Jitted program construction for both engine flavors lives here —
-``ring_step_fns`` / ``paged_step_fns`` are memoized on the model so every
-:class:`~repro.serve.engine.Engine` instance over the same model shares one
-trace cache (the scheduler fuzz suite builds dozens of engines), plus the
-``chunked_prefill`` driver that feeds several waiting prompts through one
-fixed-width jitted chunk program.
+Jitted program construction for the engine lives here: one
+backend-parameterized builder, :func:`session_step_fns`, jits a session's
+uniform ``prefill_chunk`` / ``decode_step`` surface (plus the enc-dec
+``begin_sequence`` context writer when the backend declares it).  Programs
+are memoized per (session type, model config, kernel backend) so every
+:class:`~repro.serve.engine.Engine` over the same model shares one trace
+cache (the scheduler fuzz suite builds dozens of engines).  The
+``chunked_prefill`` driver feeds several waiting prompts through repeated
+fixed-width chunk calls of that one program.
 
 Sharding rules (the paper's deployment path): TTD stays on, all non-TT
 linears go INT4 (w4a16), params are TP-sharded over ``model`` only (no FSDP
@@ -13,8 +16,6 @@ linears go INT4 (w4a16), params are TP-sharded over ``model`` only (no FSDP
 ``data`` and kv-heads / state width over ``model``.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,11 @@ from jax.sharding import PartitionSpec as P
 
 from ..config import ModelConfig, QuantConfig
 from ..kernels.dispatch import backend_override
+from ..models.sessions import (  # noqa: F401  (re-exported for callers)
+    CACHE_DTYPES,
+    InferenceSession,
+    canonical_cache_dtype,
+)
 
 
 def serve_config_of(cfg: ModelConfig, kernel_backend: str | None = None) -> ModelConfig:
@@ -41,101 +47,78 @@ def serve_config_of(cfg: ModelConfig, kernel_backend: str | None = None) -> Mode
 
 
 # ---------------------------------------------------------------------------
-# Jitted step builders (shared across engine instances)
+# Jitted step builders (shared across engine instances).  One path for every
+# backend: the session's uniform surface is what gets jitted — there is no
+# ring-vs-paged fork here anymore.
 # ---------------------------------------------------------------------------
-CACHE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
-                "float16": jnp.float16, "int8": jnp.int8}
+_STEP_CACHE: dict = {}
 
 
-def canonical_cache_dtype(dtype) -> str:
-    """Normalize a user-facing cache dtype (str or jnp dtype) to its name."""
-    if isinstance(dtype, str):
-        if dtype not in CACHE_DTYPES:
-            raise ValueError(f"unknown cache dtype {dtype!r}")
-        return dtype
-    name = jnp.dtype(dtype).name
-    if name not in CACHE_DTYPES:
-        raise ValueError(f"unknown cache dtype {dtype!r}")
-    return name
+def session_step_fns(session: InferenceSession, kernel_backend: str | None = None):
+    """(prefill_chunk, decode, begin) jitted programs for one session type.
 
-
-@functools.lru_cache(maxsize=64)
-def ring_step_fns(model, cache_dtype_name: str, max_len: int,
-                  kernel_backend: str | None):
-    """(prefill, decode) jitted programs for the ring-cache engine.
-
-    The kernel backend resolves at trace time, so the engine's choice (if
-    any) is pinned here for both programs.
+    Memoized on (session type, model config, kernel backend): the device
+    step methods are pure given the static config, so engines over the same
+    model share one trace cache regardless of their SessionSpec — geometry
+    differences only change argument shapes, which jit re-specializes on
+    naturally.  ``begin`` is ``None`` unless the backend declares
+    ``needs_encoder_ctx``.  The kernel backend resolves at trace time, so
+    the engine's choice (if any) is pinned into all programs.
     """
-    cache_dtype = CACHE_DTYPES[cache_dtype_name]
+    key = (*session.step_key, kernel_backend)
+    if key not in _STEP_CACHE:
+        while len(_STEP_CACHE) >= 64:  # bounded like the old lru_cache
+            _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
+        def _prefill(params, state, tokens, positions, _s=session):
+            with backend_override(kernel_backend):
+                return _s.prefill_chunk(params, state, tokens, positions)
 
-    def _prefill(params, batch):
-        with backend_override(kernel_backend):
-            return model.prefill(params, batch, cache_dtype=cache_dtype,
-                                 max_len=max_len)
+        def _decode(params, state, tokens, positions, _s=session):
+            with backend_override(kernel_backend):
+                return _s.decode_step(params, state, tokens, positions)
 
-    def _decode(params, cache, batch, pos):
-        with backend_override(kernel_backend):
-            return model.decode_step(params, cache, batch, pos)
-
-    return jax.jit(_prefill), jax.jit(_decode)
-
-
-@functools.lru_cache(maxsize=64)
-def paged_step_fns(model, kernel_backend: str | None):
-    """(prefill_chunk, decode) jitted programs for the paged-cache engine.
-
-    Both take the block tables and per-sequence positions as device args, so
-    one compiled program serves every schedule state of a given shape.
-    """
-
-    def _prefill_chunk(params, caches, tokens, block_tables, positions):
-        with backend_override(kernel_backend):
-            return model.prefill_paged_chunk(params, caches,
-                                             {"tokens": tokens},
-                                             block_tables, positions)
-
-    def _decode(params, caches, tokens, block_tables, positions):
-        with backend_override(kernel_backend):
-            return model.decode_step_paged(params, caches, {"tokens": tokens},
-                                           block_tables, positions)
-
-    return jax.jit(_prefill_chunk), jax.jit(_decode)
+        begin = None
+        if session.needs_encoder_ctx:
+            def begin(params, state, slot, enc_frames, _s=session):
+                with backend_override(kernel_backend):
+                    return _s.begin_sequence(params, state, slot, enc_frames)
+            begin = jax.jit(begin)
+        _STEP_CACHE[key] = (jax.jit(_prefill), jax.jit(_decode), begin)
+    return _STEP_CACHE[key]
 
 
-def chunked_prefill(prefill_chunk_fn, params, caches, prompts, block_tables,
-                    *, chunk: int):
+def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int):
     """Prefill several prompts through repeated fixed-width chunk calls.
 
-    prompts: list of B token lists (ragged; empty lists mark dummy rows used
-    to pad the batch to a fixed width — their positions are all ``-1`` so
-    their K/V lands in the null block).  block_tables: (B, W) int array.
-    Every call processes a (B, chunk) tile, so multiple waiting prompts
-    prefill together in ``ceil(max_len/chunk)`` jitted calls of one static
-    shape.  Returns (last_logits (B, V) f32 — garbage for dummy rows —
-    and the updated caches).
+    prompts: list of ``slots`` token lists — row *i* is decode slot *i*;
+    ``None``/empty rows are idle slots riding along at position ``-1`` (their
+    writes are dropped / routed to the null block by every backend).  Every
+    call processes a (slots, chunk) tile, so multiple admitted prompts
+    prefill together in ``ceil(longest/chunk)`` jitted calls of one static
+    shape.  Returns (last_logits (slots, V) f32 — garbage for idle rows —
+    and the updated state).
     """
     b = len(prompts)
-    lens = [len(p) for p in prompts]
+    lens = [len(p) if p else 0 for p in prompts]
     max_l = max(max(lens), 1)
     n_chunks = -(-max_l // chunk)
     toks = np.zeros((b, n_chunks * chunk), np.int32)
     pos = np.full((b, n_chunks * chunk), -1, np.int32)
     for i, p in enumerate(prompts):
-        toks[i, :len(p)] = p
-        pos[i, :len(p)] = np.arange(len(p))
-    bt = jnp.asarray(block_tables, jnp.int32)
+        if p:
+            toks[i, :len(p)] = p
+            pos[i, :len(p)] = np.arange(len(p))
     last = [None] * b
     for c in range(n_chunks):
         sl = slice(c * chunk, (c + 1) * chunk)
-        logits, caches = prefill_chunk_fn(params, caches,
-                                          jnp.asarray(toks[:, sl]), bt,
-                                          jnp.asarray(pos[:, sl]))
+        logits, state = prefill_chunk_fn(params, state, jnp.asarray(toks[:, sl]),
+                                         jnp.asarray(pos[:, sl]))
         for i, n in enumerate(lens):
             if n and c * chunk <= n - 1 < (c + 1) * chunk:
                 last[i] = logits[i, (n - 1) % chunk]
-    return jnp.stack([x if x is not None else jnp.zeros_like(last[lens.index(max_l)])
-                      for x in last]), caches
+    filler = next(x for x in last if x is not None)
+    return jnp.stack([x if x is not None else jnp.zeros_like(filler)
+                      for x in last]), state
 
 
 def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):

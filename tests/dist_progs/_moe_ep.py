@@ -2,13 +2,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 from repro.configs import get_config
-from repro.models import get_model
+from repro.models import build_model
 
 cfg_ep = get_config("mixtral-8x22b", reduced=True).replace(
     moe_impl="ep", n_experts=8, capacity_factor=8.0,
     compute_dtype="float32", param_dtype="float32")
 cfg_dn = cfg_ep.replace(moe_impl="dense")
-model_ep, model_dn = get_model(cfg_ep), get_model(cfg_dn)
+model_ep, model_dn = build_model(cfg_ep), build_model(cfg_dn)
 params = model_dn.init(jax.random.PRNGKey(0))
 toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg_ep.vocab_size)
 h_dn, _ = jax.jit(lambda p, t: model_dn.forward(p, {"tokens": t}))(params, toks)
@@ -24,7 +24,7 @@ print("OK")
 # replicated-expert EP: 2 experts on a 4-way model axis (replicas=2)
 cfg_rep = cfg_ep.replace(n_experts=2, experts_per_token=1)
 cfg_rep_dn = cfg_rep.replace(moe_impl="dense")
-m_rep, m_rep_dn = get_model(cfg_rep), get_model(cfg_rep_dn)
+m_rep, m_rep_dn = build_model(cfg_rep), build_model(cfg_rep_dn)
 params_r = m_rep_dn.init(jax.random.PRNGKey(2))
 h_dn2, _ = jax.jit(lambda p, t: m_rep_dn.forward(p, {"tokens": t}))(params_r, toks)
 with jax.set_mesh(mesh):

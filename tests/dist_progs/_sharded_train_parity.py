@@ -4,12 +4,12 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.config import TrainConfig
 from repro.configs import get_config
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.step import batch_pspec, build_train_step, init_train_state, state_pspecs
 
 cfg = get_config("tinyllama-1.1b", reduced=True).replace(
     compute_dtype="float32", param_dtype="float32")
-model = get_model(cfg)
+model = build_model(cfg)
 tc = TrainConfig(global_batch=8, seq_len=32, lr=1e-3, optimizer="adamw", remat="none")
 step = build_train_step(model, tc)
 

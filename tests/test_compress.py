@@ -7,7 +7,7 @@ import pytest
 from repro.config import QuantConfig, TTDConfig
 from repro.configs import get_config
 from repro.core.compress import compress_model, compression_report
-from repro.models import get_model
+from repro.models import build_model
 
 
 def test_table1_chatglm3():
@@ -41,7 +41,7 @@ def test_compress_model_full_rank_exact(key):
         compute_dtype="float32", param_dtype="float32",
         ttd=TTDConfig(enabled=True, rank=10**6, d=2))
     cfg_d = cfg_t.replace(ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
-    m_d, m_t = get_model(cfg_d), get_model(cfg_t)
+    m_d, m_t = build_model(cfg_d), build_model(cfg_t)
     params_d = m_d.init(key)
     params_t = compress_model(params_d, cfg_d, cfg_t, svd_method="svd")
     toks = jax.random.randint(key, (2, 16), 0, cfg_t.vocab_size)
@@ -56,7 +56,7 @@ def test_compress_model_segment_resplit(key):
         n_layers=4, compute_dtype="float32", param_dtype="float32")
     cfg_t = base.replace(ttd=TTDConfig(enabled=True, rank=10**6, d=2, first_tt_block=2))
     cfg_d = base.replace(ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
-    m_d, m_t = get_model(cfg_d), get_model(cfg_t)
+    m_d, m_t = build_model(cfg_d), build_model(cfg_t)
     params_d = m_d.init(key)
     params_t = compress_model(params_d, cfg_d, cfg_t, svd_method="svd")
     assert len(params_t["segments"]) == 2
@@ -71,7 +71,7 @@ def test_compress_int4_only(key):
         compute_dtype="float32", param_dtype="float32",
         ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
     cfg_q = cfg_d.replace(quant=QuantConfig(enabled=True, group_size=32))
-    m_d, m_q = get_model(cfg_d), get_model(cfg_q)
+    m_d, m_q = build_model(cfg_d), build_model(cfg_q)
     params_d = m_d.init(key)
     params_q = compress_model(params_d, cfg_d, cfg_q)
     toks = jax.random.randint(key, (2, 16), 0, cfg_d.vocab_size)

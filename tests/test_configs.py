@@ -6,7 +6,7 @@ import pytest
 
 from repro.config import QuantConfig, TTDConfig
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config
-from repro.models import get_model
+from repro.models import build_model
 
 EXPECTED_PARAMS_B = {  # dense (uncompressed) totals, ±12%
     "tinyllama-1.1b": 1.1,
@@ -31,7 +31,7 @@ def _dense(cfg):
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_param_counts(arch):
     cfg = _dense(get_config(arch))
-    model = get_model(cfg)
+    model = build_model(cfg)
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     n = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
     expect = EXPECTED_PARAMS_B[arch] * 1e9
@@ -52,7 +52,7 @@ def test_assigned_arch_list():
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_reduced_configs_are_small(arch):
     cfg = get_config(arch, reduced=True)
-    model = get_model(cfg)
+    model = build_model(cfg)
     shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     n = sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))
     assert n < 2_000_000, f"{arch} reduced too big: {n}"

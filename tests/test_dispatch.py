@@ -14,7 +14,7 @@ from repro.config import QuantConfig
 from repro.configs import get_config
 from repro.core.ttd import TTSpec
 from repro.kernels import dispatch
-from repro.models import get_model
+from repro.models import build_model
 from repro.models.modules import LinearSpec, apply_linear, init_linear
 
 KINDS = ["dense", "tt", "int4"]
@@ -93,7 +93,7 @@ def test_transformer_forward_backend_parity(key, monkeypatch):
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32",
         quant=QuantConfig(enabled=True, bits=4, group_size=32))
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
     batch = {"tokens": toks}

@@ -1,13 +1,12 @@
-"""Continuous-batching engine vs direct decode reference."""
+"""Unified session engine vs direct decode reference."""
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models import get_model
+from repro.models import build_model
 from repro.serve.engine import Engine, PagedEngine
 
 
@@ -30,7 +29,7 @@ def _ref_generate(model, params, prompt, n):
 def test_engine_matches_reference(key):
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     prompt = [3, 1, 4, 1, 5]
     ref = _ref_generate(model, params, prompt, 6)
@@ -45,7 +44,7 @@ def test_engine_sampling_seeded(key):
     reproduces, top_k=1 degenerates to argmax."""
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     prompt = [3, 1, 4, 1, 5]
 
@@ -69,7 +68,7 @@ def test_engine_sampling_seeded(key):
 def test_engine_continuous_batching(key):
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     eng = Engine(model, params, slots=2, max_len=96)
     prompts = [[1, 2, 3], [4, 5, 6, 7], [8, 9], [10, 11, 12]]
@@ -83,13 +82,13 @@ def test_engine_continuous_batching(key):
 def _tiny():
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return model, params
 
 
-@pytest.mark.parametrize("kind", ["ring", "paged"])
-def test_t_first_stamped_after_device_sync(kind, monkeypatch):
+@pytest.mark.parametrize("backend", ["paged", "ring"])
+def test_t_first_stamped_after_device_sync(backend, monkeypatch):
     """Regression: first-token latency must be timed after the device
     finishes prefill, not when the async dispatch returns.  We slow down
     ``jax.block_until_ready`` and record when each sync completed; t_first
@@ -105,10 +104,8 @@ def test_t_first_stamped_after_device_sync(kind, monkeypatch):
         return out
 
     monkeypatch.setattr(jax, "block_until_ready", slow_sync)
-    if kind == "ring":
-        eng = Engine(model, params, slots=2, max_len=96)
-    else:
-        eng = PagedEngine(model, params, slots=2, max_len=96, block_size=8)
+    eng = Engine(model, params, slots=2, max_len=96, block_size=8,
+                 backend=backend)
     req = eng.submit([3, 1, 4], max_tokens=3)
     eng.run()
     assert sync_done, "engine never synced before stamping t_first"
@@ -124,11 +121,11 @@ def test_paged_engine_cache_dtypes(cache_dtype, exact):
     the f32 cache; lossy caches must still finish every request)."""
     model, params = _tiny()
     prompts = [[1, 2, 3], [4, 5, 6, 7]]
-    ref = PagedEngine(model, params, slots=1, max_len=64, block_size=4)
+    ref = Engine(model, params, slots=1, max_len=64, block_size=4)
     ref_reqs = [ref.submit(p, max_tokens=5) for p in prompts]
     ref.run()
-    eng = PagedEngine(model, params, slots=2, max_len=64, block_size=4,
-                      cache_dtype=cache_dtype)
+    eng = Engine(model, params, slots=2, max_len=64, block_size=4,
+                 cache_dtype=cache_dtype)
     reqs = [eng.submit(p, max_tokens=5) for p in prompts]
     eng.run()
     for r, rr in zip(reqs, ref_reqs):
@@ -142,13 +139,12 @@ def test_submit_validation():
     """Empty prompts and requests that could never fit the pool are rejected
     at submit (not as a mid-run engine crash)."""
     model, params = _tiny()
-    ring = Engine(model, params, slots=2, max_len=96)
-    with pytest.raises(ValueError):
-        ring.submit([], max_tokens=2)
-    eng = PagedEngine(model, params, slots=1, max_len=64, block_size=4,
-                      num_blocks=3)  # 2 usable blocks = 8 positions
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4,
+                 num_blocks=3)  # 2 usable blocks = 8 positions
     with pytest.raises(ValueError):
         eng.submit([], max_tokens=2)
+    with pytest.raises(ValueError):
+        eng.submit([1, 2, 3], max_tokens=0)
     with pytest.raises(ValueError):  # worst case 10 tokens -> 3 blocks > 2
         eng.submit([1] * 8, max_tokens=2)
     # a request that fits the pool exactly is fine and completes
@@ -162,24 +158,34 @@ def test_paged_minimal_pool_single_sequence():
     +1 lookahead and on-demand growth never hit the unreachable-deadlock
     path (regression for admission lacking the lookahead check)."""
     model, params = _tiny()
-    eng = PagedEngine(model, params, slots=1, max_len=64, block_size=4,
-                      num_blocks=4)  # 3 usable blocks = 12 positions
-    ref = PagedEngine(model, params, slots=1, max_len=64, block_size=4)
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4,
+                 num_blocks=4)  # 3 usable blocks = 12 positions
+    ref = Engine(model, params, slots=1, max_len=64, block_size=4)
     r = eng.submit([1, 2, 3, 4, 5, 6, 7, 8], max_tokens=4)  # worst 12 tokens
     rr = ref.submit([1, 2, 3, 4, 5, 6, 7, 8], max_tokens=4)
     eng.run()
     ref.run()
     assert r.done and r.out_tokens == rr.out_tokens
-    assert eng.kv.num_free == eng.kv.num_blocks - 1
+    assert eng.manager.num_free == eng.manager.num_blocks - 1
 
 
-def test_ring_rejects_overlong_prompt():
-    """The ring engine must reject prompts that don't fit its window instead
-    of silently serving them from a cropped cache."""
+def test_rejects_overlong_prompt():
+    """Every backend rejects prompts that don't fit ``max_len`` instead of
+    silently serving them from a cropped state."""
     model, params = _tiny()
-    eng = Engine(model, params, slots=1, max_len=16)
+    eng = Engine(model, params, slots=1, max_len=16, block_size=4)
     with pytest.raises(ValueError):
         eng.submit(list(range(1, 18)), max_tokens=2)
     req = eng.submit(list(range(1, 12)), max_tokens=3)
     eng.run()
     assert req.done and len(req.out_tokens) == 3
+
+
+def test_paged_engine_alias_still_serves():
+    """The deprecated PagedEngine alias keeps its old constructor surface."""
+    model, params = _tiny()
+    eng = PagedEngine(model, params, slots=2, max_len=96, block_size=8,
+                      prefill_batch=2, prefill_chunk=8)
+    req = eng.submit([3, 1, 4], max_tokens=4)
+    eng.run()
+    assert req.out_tokens == _ref_generate(model, params, [3, 1, 4], 4)

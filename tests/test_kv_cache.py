@@ -1,4 +1,4 @@
-"""BlockManager / PagedKVCache invariants.
+"""BlockManager / block-table packing invariants.
 
 Deterministic unit tests always run; the randomized-op-sequence property
 test uses hypothesis when installed (optional-skip like the dist tests).
@@ -115,26 +115,12 @@ def test_block_manager_random_ops(ops, num_blocks, block_size):
         _check_invariants(m)
 
 
-def test_paged_kv_cache_block_table_packing():
-    import jax.numpy as jnp
+def test_block_table_packing():
+    from repro.serve.kv_cache import pack_block_tables
 
-    from repro.configs import get_config
-    from repro.models import get_model
-    from repro.serve.kv_cache import PagedKVCache
-
-    cfg = get_config("tinyllama-1.1b", reduced=True)
-    model = get_model(cfg)
-    kv = PagedKVCache(model, num_blocks=8, block_size=4, max_len=16,
-                      cache_dtype=jnp.float32)
-    assert kv.table_width == 4
-    assert kv.manager.allocate(7, 6)  # 2 blocks
-    bt = kv.block_table([7, None])
+    m = BlockManager(8, 4)
+    assert m.allocate(7, 6)  # 2 blocks
+    bt = pack_block_tables(m, [7, None], table_width=4)
     assert bt.shape == (2, 4)
-    assert list(bt[0, :2]) == kv.manager.table(7)
+    assert list(bt[0, :2]) == m.table(7)
     assert (bt[0, 2:] == 0).all() and (bt[1] == 0).all()  # null-padded
-    # int8 layout carries per-(block-slot, head) scale tables
-    kv8 = PagedKVCache(model, num_blocks=8, block_size=4, max_len=16,
-                       cache_dtype=jnp.int8)
-    seg = kv8.data[0]
-    assert seg["k"].dtype == jnp.int8
-    assert seg["k_scale"].shape == seg["k"].shape[:-1]

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.models import get_model
+from repro.models import build_model
 from repro.models.modules import unembed
 
 FAMILIES = ["tinyllama-1.1b", "mixtral-8x22b", "kimi-k2-1t-a32b",
@@ -25,7 +25,7 @@ def _batch(cfg, key, b=2, s=16):
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward(arch, key):
     cfg = get_config(arch, reduced=True)
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     batch = _batch(cfg, key)
     hidden, aux = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
@@ -39,7 +39,7 @@ def test_smoke_forward(arch, key):
 def test_decode_matches_forward(arch, key):
     cfg = get_config(arch, reduced=True).replace(compute_dtype="float32",
                                                  param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     T = 12
     batch = _batch(cfg, key, b=2, s=T)
@@ -62,7 +62,7 @@ def test_sliding_window_prefill_beyond_window(key):
     """SWA ring cache: prefill longer than the window, then decode."""
     cfg = get_config("mixtral-8x22b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32", window=8)
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     T = 24  # 3x window
     toks = jax.random.randint(key, (1, T), 0, cfg.vocab_size)
@@ -80,7 +80,7 @@ def test_multi_step_decode_chain(key):
     """Decode 6 tokens one-by-one == forward over the full sequence."""
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     params = model.init(key)
     toks = jax.random.randint(key, (1, 14), 0, cfg.vocab_size)
     _, cache = model.prefill(params, {"tokens": toks[:, :8]},
@@ -101,7 +101,7 @@ def test_train_step_smoke(arch, key):
     from repro.config import TrainConfig
     from repro.train.step import build_train_step, init_train_state
     cfg = get_config(arch, reduced=True)
-    model = get_model(cfg)
+    model = build_model(cfg)
     tc = TrainConfig(global_batch=2, seq_len=16, optimizer="adamw", remat="dots")
     state = init_train_state(model, tc, key)
     step = jax.jit(build_train_step(model, tc))

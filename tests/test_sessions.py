@@ -1,0 +1,116 @@
+"""Typed InferenceSession / StateBackend API: capability declarations,
+construction errors, state geometry, and the get_model deprecation shim."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import (
+    FAMILY_BACKENDS,
+    SessionSpec,
+    build_model,
+    default_backend,
+    get_model,
+    make_session,
+)
+
+SPEC = SessionSpec(slots=2, max_len=32, prefill_chunk=8, block_size=4)
+
+
+def _cfg(arch, **kw):
+    return get_config(arch, reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32", **kw)
+
+
+def test_capability_matrix_covers_all_families():
+    assert set(FAMILY_BACKENDS) == {"dense", "moe", "griffin", "rwkv", "encdec"}
+    for fam, backends in FAMILY_BACKENDS.items():
+        assert backends, fam
+
+
+def test_default_backends():
+    assert default_backend(_cfg("tinyllama-1.1b")) == "paged"
+    assert default_backend(_cfg("mixtral-8x22b")) == "ring"  # SWA
+    assert default_backend(_cfg("recurrentgemma-2b")) == "recurrent"
+    assert default_backend(_cfg("rwkv6-7b")) == "recurrent"
+    assert default_backend(_cfg("whisper-base")) == "encdec"
+
+
+def test_unsupported_backend_names_family():
+    """The old hasattr probe is gone: asking for a backend a family doesn't
+    implement raises NotImplementedError naming the family."""
+    with pytest.raises(NotImplementedError, match="rwkv"):
+        make_session(_cfg("rwkv6-7b"), SPEC, backend="paged")
+    with pytest.raises(NotImplementedError, match="griffin"):
+        make_session(_cfg("recurrentgemma-2b"), SPEC, backend="ring")
+    with pytest.raises(NotImplementedError, match="encdec"):
+        make_session(_cfg("whisper-base"), SPEC, backend="paged")
+    # SWA cannot go through block pools — the error points at rings
+    with pytest.raises(NotImplementedError, match="window"):
+        make_session(_cfg("mixtral-8x22b"), SPEC, backend="paged")
+    # M-RoPE positions are not position-addressable yet
+    with pytest.raises(NotImplementedError, match="mrope"):
+        make_session(_cfg("qwen2-vl-7b"), SPEC)
+
+
+def test_session_state_geometry():
+    paged = make_session(_cfg("tinyllama-1.1b"), SPEC)
+    state = paged.init_state()
+    seg = state["kv"][0]
+    nb = SPEC.resolved_num_blocks()
+    assert seg["k"].shape[1:3] == (nb, SPEC.block_size)
+    assert state["block_tables"].shape == (SPEC.slots, SPEC.table_width())
+
+    ring = make_session(_cfg("tinyllama-1.1b"), SPEC, backend="ring")
+    rseg = ring.init_state()["kv"][0]
+    assert rseg["k"].shape[1] == SPEC.slots  # per-slot rings
+    assert rseg["pos"].shape[1:] == (SPEC.slots, rseg["k"].shape[2])
+
+    # int8 paged pools carry per-(block-slot, head) scale tables
+    spec8 = SessionSpec(slots=2, max_len=16, block_size=4, num_blocks=8,
+                        cache_dtype="int8")
+    seg8 = make_session(_cfg("tinyllama-1.1b"), spec8).init_state()["kv"][0]
+    assert seg8["k"].dtype == jnp.int8
+    assert seg8["k_scale"].shape == seg8["k"].shape[:-1]
+
+    rec = make_session(_cfg("rwkv6-7b"), SPEC)
+    rstate = rec.init_state()
+    assert rstate["wkv"].shape[1] == SPEC.slots  # constant-size per slot
+
+    enc = make_session(_cfg("whisper-base"), SPEC)
+    estate = enc.init_state()
+    cfg = enc.cfg
+    assert estate["cross"]["k"].shape == (
+        cfg.n_layers, SPEC.slots, cfg.enc_len, cfg.n_heads, cfg.head_dim)
+
+
+def test_session_uniform_surface_shapes():
+    """prefill_chunk / decode_step return (B,C,V) / (B,V) logits for every
+    backend, with -1 positions marking idle rows."""
+    for arch in ("tinyllama-1.1b", "rwkv6-7b"):
+        cfg = _cfg(arch)
+        sess = make_session(cfg, SPEC)
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        state = sess.init_state()
+        if sess.uses_blocks:
+            # slot 0 owns blocks 1,2 (8 positions)
+            bt = jnp.zeros((SPEC.slots, SPEC.table_width()), jnp.int32)
+            state = sess.with_tables(state, bt.at[0, :2].set(jnp.asarray([1, 2])))
+        toks = jnp.asarray([[5, 6, 7, 0, 0, 0, 0, 0], [0] * 8], jnp.int32)
+        pos = jnp.asarray([[0, 1, 2, -1, -1, -1, -1, -1], [-1] * 8], jnp.int32)
+        logits, state = sess.prefill_chunk(params, state, toks, pos)
+        assert logits.shape == (2, 8, cfg.vocab_size)
+        dl, state = sess.decode_step(params, state,
+                                     jnp.asarray([[9], [0]], jnp.int32),
+                                     jnp.asarray([3, -1], jnp.int32))
+        assert dl.shape == (2, cfg.vocab_size)
+        assert bool(jnp.all(jnp.isfinite(dl[0])))
+
+
+def test_get_model_deprecated():
+    cfg = _cfg("tinyllama-1.1b")
+    with pytest.warns(DeprecationWarning, match="build_model"):
+        model = get_model(cfg)
+    assert model.cfg is cfg
+    # the Model protocol no longer carries probe-able paged fields
+    assert not hasattr(model, "init_paged_cache")

@@ -8,7 +8,7 @@ import pytest
 from repro.config import TrainConfig
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig
-from repro.models import get_model
+from repro.models import build_model
 from repro.train.step import build_train_step, init_train_state
 from repro.train.trainer import Trainer
 
@@ -16,7 +16,7 @@ from repro.train.trainer import Trainer
 def _setup(tmp_path, key, steps=60):
     cfg = get_config("tinyllama-1.1b", reduced=True).replace(
         compute_dtype="float32", param_dtype="float32")
-    model = get_model(cfg)
+    model = build_model(cfg)
     tc = TrainConfig(global_batch=4, seq_len=32, lr=3e-3, warmup_steps=5,
                      total_steps=steps, optimizer="adamw", remat="none")
     state = init_train_state(model, tc, key)
