@@ -103,6 +103,7 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
               max_tokens=8, out_path="BENCH_serve.json"):
     import jax
 
+    from repro.kernels import dispatch
     from repro.models import build_model
     from repro.serve.engine import Engine
 
@@ -114,6 +115,12 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
     for label, arch, backend in SERVE_FAMILIES:
         cfg = get_config(arch, reduced=True).replace(
             compute_dtype="float32", param_dtype="float32")
+        # the chunked-prefill attention backend the engine's jitted steps
+        # resolve (first-token latency runs through this path).  The engines
+        # below are built with kernel_backend=None, so the attention dispatch
+        # sees no explicit arg, no override and no per-spec preference —
+        # mirror exactly that chain (role env > global env > device auto)
+        prefill_backend = dispatch.resolve_backend(None, role="attn_prefill")
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
         for slots in slot_counts:
@@ -123,8 +130,10 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
                                prefill_batch=min(slots, 4), prefill_chunk=8),
                 workload)
             report(f"   {label:12s} slots={slots}: {r['tok_per_s']:7.1f} tok/s  "
-                   f"first-token {r['mean_first_token_s']*1e3:7.1f}ms")
-            rows.append({"family": label, "arch": arch, "slots": slots, **r})
+                   f"first-token {r['mean_first_token_s']*1e3:7.1f}ms  "
+                   f"prefill={prefill_backend}")
+            rows.append({"family": label, "arch": arch, "slots": slots,
+                         "prefill_attention_backend": prefill_backend, **r})
     rec = {
         "workload": {"n_requests": n_requests, "max_tokens": max_tokens,
                      "max_len": max_len},

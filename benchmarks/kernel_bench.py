@@ -22,6 +22,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quant import quantize_int4
 from repro.core.tt_linear import init_tt_linear, tt_linear_apply
@@ -71,6 +72,57 @@ def _rel_err(a, b):
     b = jnp.asarray(b, jnp.float32)
     scale = float(jnp.max(jnp.abs(b))) or 1.0
     return float(jnp.max(jnp.abs(a - b))) / scale
+
+
+def _prefill_attention_rows(*, iters, smoke):
+    """Chunked-prefill attention (paged + ring layouts) through
+    ``dispatch.prefill_attention``: ref gather oracle vs the streaming
+    Pallas kernel under the interpreter."""
+    rng = np.random.default_rng(0)
+    if smoke:
+        b, chunk, ctx, bs, hkv, g, dh, wr, win = 2, 8, 24, 4, 2, 2, 16, 16, 8
+    else:
+        b, chunk, ctx, bs, hkv, g, dh, wr, win = 4, 32, 256, 16, 4, 4, 64, 160, 128
+    h = hkv * g
+    q = jnp.asarray(rng.standard_normal((b, chunk, h, dh)), jnp.float32)
+    qpos = jnp.broadcast_to(jnp.arange(ctx - chunk, ctx, dtype=jnp.int32), (b, chunk))
+    rows = []
+
+    # paged layout: each sequence owns a contiguous run of the shuffled pool
+    nb = 1 + b * ((ctx + bs - 1) // bs)
+    cache = {"k": jnp.asarray(rng.standard_normal((nb, bs, hkv, dh)), jnp.float32),
+             "v": jnp.asarray(rng.standard_normal((nb, bs, hkv, dh)), jnp.float32)}
+    perm = rng.permutation(np.arange(1, nb))
+    bt = jnp.asarray(perm.reshape(b, -1), jnp.int32)
+
+    def paged(backend):
+        f = jax.jit(lambda q: dispatch.prefill_attention(
+            q, qpos, cache=cache, block_tables=bt, backend=backend))
+        return f, (q,)
+
+    # ring layout (SWA): ring of window + chunk entries, position p at p % wr
+    k = jnp.asarray(rng.standard_normal((b, wr, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, wr, hkv, dh)), jnp.float32)
+    kp = np.full((b, wr), -1, np.int32)
+    for p in range(max(0, ctx - wr), ctx):
+        kp[:, p % wr] = p
+    kp = jnp.asarray(kp)
+
+    def ring(backend):
+        f = jax.jit(lambda q: dispatch.prefill_attention(
+            q, qpos, k=k, v=v, kpos=kp, window=win, backend=backend))
+        return f, (q,)
+
+    for name, make in (("prefill_paged", paged), ("prefill_ring_swa", ring)):
+        f_ref, args = make("ref")
+        f_pl, _ = make("pallas-interpret")
+        y_ref, y_pl = f_ref(*args), f_pl(*args)
+        rows.append({"name": name, "kind": "prefill_attention",
+                     "n_in": ctx, "n_out": chunk, "batch": b,
+                     "ref_us": _time(f_ref, *args, iters=iters),
+                     "pallas_interpret_us": _time(f_pl, *args, iters=iters),
+                     "max_rel_err": _rel_err(y_pl, y_ref)})
+    return rows
 
 
 def run_dispatch(report=print, *, batch=32, iters=3, smoke=False,
@@ -123,6 +175,8 @@ def run_dispatch(report=print, *, batch=32, iters=3, smoke=False,
                      "ref_us": _time(f_ref, *args, iters=iters),
                      "pallas_interpret_us": _time(f_pl, *args, iters=iters),
                      "max_rel_err": _rel_err(y_pl, y_ref)})
+
+    rows.extend(_prefill_attention_rows(iters=iters, smoke=smoke))
 
     # pallas-interpret timings are Python-interpreter wall-time — useful only
     # as a parity/rot gate.  Label them so e.g. the int4 row's apparent

@@ -62,16 +62,30 @@ def _convert_linear(p_dense: dict[str, Any], spec: LinearSpec, svd_method: str):
     return out
 
 
-def _walk(p_dense, spec_tree, svd_method):
+def _walk(p_dense, spec_tree, svd_method, path=""):
     if isinstance(spec_tree, LinearSpec):
         return _convert_linear(p_dense, spec_tree, svd_method)
     if spec_tree is None:
         return p_dense
     if isinstance(spec_tree, dict):
-        return {k: _walk(p_dense[k], spec_tree[k], svd_method) if k in spec_tree
+        missing = set(spec_tree) - set(p_dense)
+        if missing:
+            # a dangling spec key would otherwise drop its conversion silently
+            raise ValueError(
+                f"compress: spec keys {sorted(missing)} at "
+                f"{path or '<root>'!r} have no matching param entries")
+        return {k: _walk(p_dense[k], spec_tree[k], svd_method,
+                         f"{path}/{k}" if path else k) if k in spec_tree
                 else p_dense[k] for k in p_dense}
     if isinstance(spec_tree, (list, tuple)):
-        return [_walk(p, s, svd_method) for p, s in zip(p_dense, spec_tree)]
+        if len(p_dense) != len(spec_tree):
+            # a silent zip here would drop trailing layers uncompressed
+            raise ValueError(
+                f"compress: param/spec tree length mismatch at "
+                f"{path or '<root>'!r}: {len(p_dense)} param entries vs "
+                f"{len(spec_tree)} spec entries")
+        return [_walk(p, s, svd_method, f"{path}[{i}]")
+                for i, (p, s) in enumerate(zip(p_dense, spec_tree))]
     raise TypeError(type(spec_tree))
 
 

@@ -74,8 +74,11 @@ def search_spec(
     if target_cr is not None:
         ok = [c for c in candidates if c.cr >= target_cr]
         pool = ok or candidates
-        # most expressive (lowest CR above target = highest rank budget)
-        return min(pool, key=lambda c: c.cr)
+        # most expressive (lowest CR above target = highest rank budget);
+        # equal-CR candidates are distinguished by reconstruction error when
+        # a weight was supplied (unmeasured candidates sort last)
+        return min(pool, key=lambda c: (
+            c.cr, c.rel_error if c.rel_error is not None else float("inf")))
     # paper default: d=4, r=16 if attainable
     for c in candidates:
         if c.spec.d == 4 and max(c.spec.ranks) == 16:

@@ -44,6 +44,7 @@ from . import ref
 from .epilogue import apply_epilogue
 from .int4_matmul import int4_matmul_pallas
 from .paged_attention import paged_attention_pallas
+from .prefill_attention import prefill_attention_pallas
 from .tt_linear import tt_linear_pallas
 
 BACKENDS = ("ref", "pallas-interpret", "pallas")
@@ -140,7 +141,7 @@ def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,
     positions (-1 = inactive row → zeros).  ``ref`` gathers the context and
     runs the masked-softmax oracle; the Pallas backends run the fused
     online-softmax kernel (``kernels/paged_attention.py``).  Chunked prefill
-    (Sq > 1) always uses the ref math — see ``kernels/ref.py``.
+    (Sq > 1) goes through :func:`prefill_attention` instead.
     """
     backend = resolve_backend(backend, role=role)
     if backend == "ref":
@@ -149,6 +150,44 @@ def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,
     return paged_attention_pallas(q, cache, block_tables, qpos,
                                   sm_scale=sm_scale,
                                   interpret=(backend == "pallas-interpret"))
+
+
+def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
+                      v=None, kpos=None, window: int = 0, sm_scale=None,
+                      backend: str | None = None, role: str = "attn_prefill"):
+    """Ragged chunked-prefill attention over a paged pool or per-slot rings.
+
+    q: (B, Sq, H, Dh); qpos: (B, Sq) absolute positions (``-1`` = padding
+    row → zeros).  Pass either ``cache`` + ``block_tables`` (paged layout)
+    or ``k``/``v`` + ``kpos`` (ring layout — ``kpos`` ``-1`` = empty entry).
+    ``ref`` runs the gather/masked-softmax oracles in ``kernels/ref.py``;
+    the Pallas backends run the fused streaming kernel
+    (``kernels/prefill_attention.py``) — same policy chain as
+    ``paged_attention``, resolved at trace time.
+    """
+    backend = resolve_backend(backend, role=role)
+    paged = cache is not None or block_tables is not None
+    ring = k is not None or v is not None or kpos is not None
+    if paged == ring:
+        raise ValueError("prefill_attention takes exactly one layout: "
+                         "cache+block_tables (paged) or k/v/kpos (ring)")
+    if paged and (cache is None or block_tables is None):
+        raise ValueError("paged layout needs both cache and block_tables")
+    if ring and (k is None or v is None or kpos is None):
+        raise ValueError("ring layout needs all of k, v and kpos")
+    if paged:
+        if backend == "ref":
+            return ref.paged_attention(q, cache, block_tables, qpos,
+                                       sm_scale=sm_scale, window=window)
+        return prefill_attention_pallas(
+            q, qpos, cache=cache, block_tables=block_tables, window=window,
+            sm_scale=sm_scale, interpret=(backend == "pallas-interpret"))
+    if backend == "ref":
+        return ref.ring_attention(q, k, v, qpos, kpos, window=window,
+                                  sm_scale=sm_scale)
+    return prefill_attention_pallas(
+        q, qpos, k=k, v=v, kpos=kpos, window=window, sm_scale=sm_scale,
+        interpret=(backend == "pallas-interpret"))
 
 
 def int4_matmul(x, qweight, scales, *, group: int = 128, scale=None, bias=None,

@@ -1,0 +1,201 @@
+"""Ragged chunked-prefill flash-attention Pallas kernel.
+
+The paper's headline serving number is *first-token delay*, which is decided
+by the prefill path.  PR 3 fused decode (one query per sequence), but chunked
+prefill still ran the pure-jnp gather oracle: every layer materialized the
+whole ``(B, W*BS, Hkv, Dh)`` f32 gathered context in HBM and computed dense
+``(Sq × K)`` scores including idle rows.  This kernel closes that gap — the
+last fork between "kernel-accelerated decode" and "oracle-math prefill".
+
+Grid: ``(seq, q-tile)`` — one program per (sequence, tile of query tokens).
+Each program streams K/V tiles through the flash online-softmax recurrence,
+with GQA head grouping and causal + sliding-window masking driven by
+per-sequence absolute positions (``-1`` = padding → zero output).  Two cache
+layouts share the kernel body:
+
+* **paged** — K/V live in shared block pools addressed through a per-sequence
+  block table; K positions are implicit (gathered index *i* holds absolute
+  position *i*), tiles are the ``block_size``-wide blocks, and the loop trip
+  count is the tile's max query position rounded up to blocks, so a program
+  never reads beyond the blocks its sequence actually occupies (all-idle
+  tiles run zero iterations).  int8 pools dequantize per-(block-slot, head)
+  scales in-tile, fused with the score matmul.
+* **ring** — K/V are per-slot rings with an explicit ``kpos`` operand
+  (``-1`` = empty entry); tiles stream over the ring width, and the mask is
+  position-driven (causal, ``kpos >= 0``, sliding window), so SWA families
+  (mixtral, griffin's attention layers) prefill through the same kernel.
+
+Like ``kernels/paged_attention.py``, the pools/rings are handed to the kernel
+whole and sliced per tile — correct under the interpreter and for Mosaic
+while they fit VMEM; a production TPU build would prefetch the block table as
+a scalar argument (``pltpu.PrefetchScalarGridSpec``) and DMA one tile per
+grid step from HBM, changing only this file, not the dispatch contract.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, qpos_ref, *refs, paged: bool, kv_tile: int, n_kv_tiles: int,
+            n_kv_heads: int, window: int, sm_scale: float, quantized: bool,
+            out_dtype):
+    out_ref = refs[-1]
+    if paged:
+        bt_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+        ks_ref, vs_ref = (refs[3], refs[4]) if quantized else (None, None)
+        kpos_ref = None
+    else:
+        kpos_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
+        bt_ref = ks_ref = vs_ref = None
+    q = q_ref[0]  # (QT, H, Dh)
+    qt, h, dh = q.shape
+    g = h // n_kv_heads
+    qh = q.reshape(qt, n_kv_heads, g, dh).astype(jnp.float32) * sm_scale
+    qpos = qpos_ref[0]  # (QT,) int32; -1 = padding row
+    if paged:
+        # walk only the blocks this tile's queries can see (0 when all-idle)
+        qmax = jnp.max(qpos)
+        n_tiles = (jnp.maximum(qmax + 1, 0) + kv_tile - 1) // kv_tile
+        ring_k = ring_v = ring_pos = None
+    else:
+        n_tiles = n_kv_tiles  # static: ring width is fixed per call
+        ring_k = k_ref[0]     # (WR, Hkv, Dh) — already VMEM-resident
+        ring_v = v_ref[0]
+        ring_pos = kpos_ref[0]
+
+    def body(j, carry):
+        m, l, acc = carry
+        if paged:
+            blk = bt_ref[0, j]
+            kb = k_ref[pl.ds(blk, 1)][0].astype(jnp.float32)  # (KT, Hkv, Dh)
+            vb = v_ref[pl.ds(blk, 1)][0].astype(jnp.float32)
+            if quantized:
+                kb = kb * ks_ref[pl.ds(blk, 1)][0][..., None]
+                vb = vb * vs_ref[pl.ds(blk, 1)][0][..., None]
+            kpos = j * kv_tile + jnp.arange(kv_tile, dtype=jnp.int32)
+            valid = kpos[None, :] <= qpos[:, None]  # causal + ragged block
+        else:
+            kb = jax.lax.dynamic_slice_in_dim(ring_k, j * kv_tile, kv_tile
+                                              ).astype(jnp.float32)
+            vb = jax.lax.dynamic_slice_in_dim(ring_v, j * kv_tile, kv_tile
+                                              ).astype(jnp.float32)
+            kpos = jax.lax.dynamic_slice_in_dim(ring_pos, j * kv_tile, kv_tile)
+            valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+        valid &= qpos[:, None] >= 0
+        if window > 0:
+            valid &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.einsum("qhgd,khd->hgqk", qh, kb)  # (Hkv, G, QT, KT)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None]) * valid[None, None]
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("hgqk,khd->hgqd", p, vb)
+        acc_new = acc * corr[..., None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((n_kv_heads, g, qt), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((n_kv_heads, g, qt), jnp.float32)
+    a0 = jnp.zeros((n_kv_heads, g, qt, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_tiles, body, (m0, l0, a0))
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+    out_ref[0] = out.transpose(2, 0, 1, 3).reshape(qt, h, dh).astype(out_dtype)
+
+
+def prefill_attention_pallas(q: jax.Array, qpos: jax.Array, *,
+                             cache: dict | None = None,
+                             block_tables: jax.Array | None = None,
+                             k: jax.Array | None = None,
+                             v: jax.Array | None = None,
+                             kpos: jax.Array | None = None,
+                             window: int = 0, sm_scale: float | None = None,
+                             q_tile: int = 64, kv_tile: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """Chunked-prefill attention over a paged pool or per-slot rings.
+
+    q: (B, Sq, H, Dh); qpos: (B, Sq) int32 absolute query positions (``-1`` =
+    padding row → zero output).  Exactly one layout:
+
+    * paged — ``cache``: ``{"k","v": (NB, BS, Hkv, Dh)}`` plus
+      ``k_scale``/``v_scale`` ``(NB, BS, Hkv)`` for int8 pools;
+      ``block_tables``: (B, W) int32 ordered logical→physical ids.
+    * ring — ``k``/``v``: (B, WR, Hkv, Dh); ``kpos``: (B, WR) int32 absolute
+      key positions, ``-1`` = empty entry.
+
+    The chunk's own K/V must already be written (write-then-attend, as both
+    ``paged_kv_update`` and ``ring_kv_update`` guarantee).  Returns
+    (B, Sq, H, Dh) in ``q.dtype``.  ``interpret`` defaults True like the
+    other ``*_pallas`` kernels; production callers go through
+    ``kernels.dispatch.prefill_attention``.
+    """
+    paged = cache is not None
+    b, sq, h, dh = q.shape
+    sm_scale = sm_scale or (1.0 / math.sqrt(dh))
+    qt = min(q_tile, sq)
+    pad_q = (-sq) % qt
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad_q)), constant_values=-1)
+    nqt = q.shape[1] // qt
+    grid = (b, nqt)
+
+    in_specs = [
+        pl.BlockSpec((1, qt, h, dh), lambda i, j: (i, j, 0, 0)),
+        pl.BlockSpec((1, qt), lambda i, j: (i, j)),
+    ]
+    args = [q, qpos.astype(jnp.int32)]
+
+    if paged:
+        nb, bs, hkv, _ = cache["k"].shape
+        w = block_tables.shape[1]
+        quantized = "k_scale" in cache
+        kv_t, n_kv_tiles = bs, 0  # trip count is data-dependent (block walk)
+        in_specs += [
+            pl.BlockSpec((1, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((nb, bs, hkv, dh), lambda i, j: (0, 0, 0, 0)),
+            pl.BlockSpec((nb, bs, hkv, dh), lambda i, j: (0, 0, 0, 0)),
+        ]
+        args += [block_tables.astype(jnp.int32), cache["k"], cache["v"]]
+        if quantized:
+            for nm in ("k_scale", "v_scale"):
+                in_specs.append(pl.BlockSpec((nb, bs, hkv), lambda i, j: (0, 0, 0)))
+                args.append(cache[nm].astype(jnp.float32))
+    else:
+        if k is None or v is None or kpos is None:
+            raise ValueError("ring layout needs k, v and kpos")
+        skv, hkv = k.shape[1], k.shape[2]
+        quantized = False
+        kv_t = min(kv_tile, skv)
+        pad_k = (-skv) % kv_t
+        if pad_k:
+            k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+            kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)), constant_values=-1)
+        n_kv_tiles = k.shape[1] // kv_t
+        wr = k.shape[1]
+        in_specs += [
+            pl.BlockSpec((1, wr), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, wr, hkv, dh), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, wr, hkv, dh), lambda i, j: (i, 0, 0, 0)),
+        ]
+        args += [kpos.astype(jnp.int32), k, v]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, paged=paged, kv_tile=kv_t,
+                          n_kv_tiles=n_kv_tiles, n_kv_heads=hkv,
+                          window=window, sm_scale=sm_scale,
+                          quantized=quantized, out_dtype=q.dtype),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, qt, h, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:, :sq] if pad_q else out

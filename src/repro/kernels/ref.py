@@ -60,13 +60,15 @@ def gather_paged_kv(cache: dict, block_tables: jax.Array):
 
 
 def paged_attention(q: jax.Array, cache: dict, block_tables: jax.Array,
-                    qpos: jax.Array, *, sm_scale: float | None = None) -> jax.Array:
+                    qpos: jax.Array, *, sm_scale: float | None = None,
+                    window: int = 0) -> jax.Array:
     """Causal attention of per-sequence queries against a paged KV cache.
 
     q: (B, Sq, H, Dh) — Sq == 1 is the decode shape, Sq > 1 a prefill chunk.
     qpos: (B, Sq) absolute position of each query token; ``-1`` marks
     padding (output zeros).  Query ``p`` attends to cache positions
-    ``0..p`` inclusive (the current token's K/V must already be written).
+    ``0..p`` inclusive (the current token's K/V must already be written),
+    further clipped to the last ``window`` positions when ``window > 0``.
     Per-sequence masking makes this the oracle for ragged decode batches —
     unlike ``models.modules.attention_dense`` whose positions are shared
     across the batch.
@@ -80,12 +82,45 @@ def paged_attention(q: jax.Array, cache: dict, block_tables: jax.Array,
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k) * sm_scale
     kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
     mask = (kpos[None, None, :] <= qpos[:, :, None]) & (qpos >= 0)[:, :, None]
+    if window > 0:
+        mask &= qpos[:, :, None] - kpos[None, None, :] < window
     maskb = mask[:, None, None]  # (B, 1, 1, Sq, K)
     s = jnp.where(maskb, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m) * maskb  # masked rows: exp(0)=1 zeroed by the mask
     l = jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, qpos: jax.Array,
+                   kpos: jax.Array, *, window: int = 0,
+                   sm_scale: float | None = None) -> jax.Array:
+    """Causal attention against per-slot ring caches (the ring-layout oracle).
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh); qpos: (B, Sq) / kpos:
+    (B, Skv) per-sequence absolute positions (``-1`` = padding query → zero
+    output / empty ring entry → never attended).  Causal, optionally
+    sliding-window — the per-sequence counterpart of
+    ``models.modules.attention_dense``, which the tests tie it back to.
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    sm_scale = sm_scale or (1.0 / math.sqrt(dh))
+    qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k.astype(jnp.float32)) * sm_scale
+    mask = (kpos[:, None, :] >= 0) & (qpos[:, :, None] >= 0) \
+        & (kpos[:, None, :] <= qpos[:, :, None])
+    if window > 0:
+        mask &= qpos[:, :, None] - kpos[:, None, :] < window
+    maskb = mask[:, None, None]  # (B, 1, 1, Sq, Skv)
+    s = jnp.where(maskb, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * maskb
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
     o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
     return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
 

@@ -345,42 +345,13 @@ def flash_attention(q, k, v, *, qpos, kpos, kmask=None, causal=True, window=0,
 
 
 # ---------------------------------------------------------------------------
-# Ragged-batch attention + per-slot ring caches (session serving path,
-# DESIGN.md §7).  Unlike :func:`attention_dense`, positions here are
-# *per sequence*: qpos (B, Sq) / kpos (B, Skv), ``-1`` marking padding rows
-# or empty cache entries, so one fixed-shape program serves arbitrarily
-# ragged continuous-batching schedules.
+# Per-slot ring caches (session serving path, DESIGN.md §7).  Positions are
+# *per sequence* — (B, S) int32, ``-1`` marking padding rows or empty cache
+# entries — so one fixed-shape program serves arbitrarily ragged
+# continuous-batching schedules.  The matching ragged attention lives in the
+# kernel layer: ``kernels.dispatch.prefill_attention`` (ring layout), with
+# ``kernels.ref.ring_attention`` as its oracle.
 # ---------------------------------------------------------------------------
-def attention_ragged(q, k, v, *, qpos, kpos, causal=True, window=0, scale=None):
-    """Attention with per-sequence absolute positions.
-
-    q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh); qpos: (B, Sq) int32;
-    kpos: (B, Skv) int32.  Queries/keys at position ``-1`` are inactive:
-    inactive keys are never attended, inactive queries return zeros.
-    """
-    b, sq, h, dh = q.shape
-    hkv = k.shape[2]
-    g = h // hkv
-    scale = scale or (1.0 / math.sqrt(dh))
-    qh = q.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4)
-    kh = k.transpose(0, 2, 1, 3)
-    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh.astype(jnp.float32),
-                   kh.astype(jnp.float32)) * scale
-    mask = (kpos[:, None, :] >= 0) & (qpos[:, :, None] >= 0)
-    if causal:
-        mask &= kpos[:, None, :] <= qpos[:, :, None]
-    if window > 0:
-        mask &= qpos[:, :, None] - kpos[:, None, :] < window
-    maskb = mask[:, None, None]  # (B, 1, 1, Sq, Skv)
-    s = jnp.where(maskb, s, NEG_INF)
-    m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s - m) * maskb  # fully-masked rows: exp(0)=1 zeroed here
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.transpose(0, 2, 1, 3).astype(jnp.float32))
-    o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
-    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
-
-
 def ring_kv_update(cache: dict, k_new, v_new, positions):
     """Scatter fresh K/V into per-slot ring caches at ``pos % ring_width``.
 

@@ -318,4 +318,10 @@ def make_session(cfg_or_model, spec: SessionSpec | None = None, *,
         raise NotImplementedError(
             f"family {cfg.family!r} ({cfg.name}) has pos_type "
             f"{cfg.pos_type!r}; the {backend!r} backend supports rope|none")
+    if canonical_cache_dtype(spec.cache_dtype) == "int8" \
+            and backend not in ("paged", "encdec"):
+        raise NotImplementedError(
+            f"cache_dtype 'int8' needs the block pools' per-slot scale "
+            f"tables; the {backend!r} backend stores K/V unscaled (a raw "
+            "int8 cast would corrupt outputs) — use a float cache dtype")
     return _SESSION_TYPES[cfg.family, backend](cfg, spec)

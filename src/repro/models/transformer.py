@@ -23,7 +23,6 @@ from ..config import ModelConfig
 from ..dist import constrain
 from ..dist.api import BATCH
 from ..kernels import dispatch
-from ..kernels import ref as kernels_ref
 from .modules import (
     LinearSpec,
     apply_linear,
@@ -31,7 +30,6 @@ from .modules import (
     apply_norm,
     apply_rope,
     attention_dense,
-    attention_ragged,
     dt,
     embed_lookup,
     flash_attention,
@@ -198,8 +196,9 @@ def attn_paged(params, specs, cfg: ModelConfig, x, rope_cs, cache, block_tables,
     positions: (B, S) absolute token positions (``-1`` = padding, routed to
     the null block and masked out).  S == 1 is the decode shape and runs the
     fused Pallas kernel via ``kernels.dispatch.paged_attention``; S > 1 is a
-    chunked-prefill step and uses the gather-based oracle math (prefill is
-    matmul-bound — the per-token block walk is a decode optimization).
+    chunked-prefill step and runs the ragged prefill flash-attention kernel
+    via ``kernels.dispatch.prefill_attention`` (both with the gather oracle
+    as their ``ref`` backend).
     """
     b, s, _ = x.shape
     q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
@@ -208,7 +207,8 @@ def attn_paged(params, specs, cfg: ModelConfig, x, rope_cs, cache, block_tables,
         o = dispatch.paged_attention(q[:, 0], new_cache, block_tables,
                                      positions[:, 0])[:, None]
     else:
-        o = kernels_ref.paged_attention(q, new_cache, block_tables, positions)
+        o = dispatch.prefill_attention(q, positions, cache=new_cache,
+                                       block_tables=block_tables)
     o = constrain(o.astype(compute_dtype), BATCH, None, "model", None)
     o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
                      specs.attn_d()["wo"], compute_dtype, residual=residual)
@@ -540,13 +540,17 @@ def attn_ring(params, specs, cfg: ModelConfig, x, rope_cs, cache, positions,
     """Attention against a per-slot ring cache (write-then-attend).
 
     cache: one layer's ``{"k","v","pos"}`` rings; positions: (B, S) absolute
-    positions (``-1`` = padding, write dropped / query masked).
+    positions (``-1`` = padding, write dropped / query masked).  Both chunked
+    prefill (S > 1) and ragged decode (S == 1) run the streaming kernel via
+    ``kernels.dispatch.prefill_attention`` (ring layout: the ring's ``pos``
+    array is the kernel's ``kpos`` operand).
     """
     b, s, _ = x.shape
     q, k, v = _qkv(params, specs, cfg, x, rope_cs, compute_dtype)
     new_cache = ring_kv_update(cache, k, v, positions)
-    o = attention_ragged(q, new_cache["k"], new_cache["v"], qpos=positions,
-                         kpos=new_cache["pos"], causal=True, window=cfg.window)
+    o = dispatch.prefill_attention(q, positions, k=new_cache["k"],
+                                   v=new_cache["v"], kpos=new_cache["pos"],
+                                   window=cfg.window)
     o = constrain(o.astype(compute_dtype), BATCH, None, "model", None)
     o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
                      specs.attn_d()["wo"], compute_dtype, residual=residual)

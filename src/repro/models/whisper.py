@@ -17,7 +17,6 @@ from ..config import ModelConfig
 from ..dist import constrain
 from ..dist.api import BATCH
 from ..kernels import dispatch
-from ..kernels import ref as kernels_ref
 from .modules import (
     apply_linear, apply_mlp, apply_norm, attention_dense, dt, embed_lookup,
     flash_attention, init_embed, init_linear, init_mlp, init_norm, linear_spec,
@@ -339,7 +338,8 @@ def _self_attn_paged(p, aspecs, cfg: ModelConfig, x, cache, block_tables,
         o = dispatch.paged_attention(q[:, 0], new_cache, block_tables,
                                      positions[:, 0])[:, None]
     else:
-        o = kernels_ref.paged_attention(q, new_cache, block_tables, positions)
+        o = dispatch.prefill_attention(q, positions, cache=new_cache,
+                                       block_tables=block_tables)
     o = o.astype(compute_dtype).reshape(b, s, cfg.q_dim)
     y = apply_linear(p["wo"], o, aspecs["wo"], compute_dtype, residual=residual)
     return y, new_cache

@@ -378,3 +378,9 @@ class PagedEngine(Engine):
     to :class:`Engine` (whose default backend for full-attention dense/moe
     is the paged block pool this class used to hard-code).
     """
+
+    def __init__(self, *args, **kwargs):
+        import warnings
+        warnings.warn("PagedEngine is a deprecated alias; use serve.engine."
+                      "Engine", DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)

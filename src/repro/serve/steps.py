@@ -116,9 +116,10 @@ def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int):
         for i, n in enumerate(lens):
             if n and c * chunk <= n - 1 < (c + 1) * chunk:
                 last[i] = logits[i, (n - 1) % chunk]
-    filler = next(x for x in last if x is not None)
-    return jnp.stack([x if x is not None else jnp.zeros_like(filler)
-                      for x in last]), state
+    # idle rows (including the all-empty batch, whose single chunk ran at
+    # position -1 with every write dropped) get a zero-logits row
+    zero = jnp.zeros(logits.shape[-1], logits.dtype)
+    return jnp.stack([x if x is not None else zero for x in last]), state
 
 
 def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):

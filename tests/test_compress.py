@@ -83,3 +83,32 @@ def test_compress_int4_only(key):
     cos = float(jnp.sum(h_d * h_q) /
                 (jnp.linalg.norm(h_d) * jnp.linalg.norm(h_q)))
     assert cos > 0.9, cos
+
+
+def test_walk_length_mismatch_raises():
+    """A malformed spec tree used to zip-truncate silently, leaving trailing
+    layers uncompressed; it must now raise and name the offending path."""
+    from repro.core.compress import _walk
+
+    params = {"segments": [{"x": 1}, {"x": 2}, {"x": 3}]}
+    spec = {"segments": [None, None]}
+    with pytest.raises(ValueError, match=r"'segments'.*3 param.*2 spec"):
+        _walk(params, spec, "auto")
+    # equal lengths (with nested lists) still walk fine
+    out = _walk({"segments": [{"x": 1}, {"x": 2}]}, {"segments": [None, None]},
+                "auto")
+    assert out == {"segments": [{"x": 1}, {"x": 2}]}
+    # nested mismatches name the indexed path
+    with pytest.raises(ValueError, match=r"'segments\[0\]/mlp'"):
+        _walk({"segments": [{"mlp": [1, 2]}]}, {"segments": [{"mlp": [None]}]},
+              "auto")
+
+
+def test_walk_dangling_spec_key_raises():
+    """A typoed spec key (no matching param) must fail loudly too, not drop
+    the conversion."""
+    from repro.core.compress import _walk
+
+    with pytest.raises(ValueError, match=r"\['atn'\].*'segments\[0\]'"):
+        _walk({"segments": [{"attn": {"x": 1}}]},
+              {"segments": [{"atn": None}]}, "auto")

@@ -8,6 +8,7 @@ from repro.core import TTSpec, init_tt_linear, quantize_int4
 from repro.kernels import dispatch, ref
 from repro.kernels.int4_matmul import int4_matmul_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.prefill_attention import prefill_attention_pallas
 from repro.kernels.tt_linear import pick_block_b, tt_linear_pallas
 from repro.models.modules import attention_dense
 
@@ -281,3 +282,222 @@ def test_paged_int8_write_read_roundtrip():
                                atol=2e-2)
     np.testing.assert_allclose(np.asarray(v_rt[0, :6]), np.asarray(v_new[0]),
                                atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Ragged chunked-prefill flash attention — kernel vs the ref.py oracles over
+# both cache layouts (paged block pools / per-slot rings)
+# ---------------------------------------------------------------------------
+def _prefill_qpos(ctx_lens, chunk):
+    """(B, chunk) query positions: each row holds the last ``min(chunk, c)``
+    positions of its sequence, tail-padded with -1 (idle rows all -1)."""
+    qpos = np.full((len(ctx_lens), chunk), -1, np.int32)
+    for i, c in enumerate(ctx_lens):
+        n = min(chunk, c)
+        qpos[i, :n] = np.arange(c - n, c)
+    return jnp.asarray(qpos)
+
+
+def _prefill_paged_case(seed, *, block_size, ctx_lens, chunk, hkv=2, g=2,
+                        dh=16, cache_dtype=jnp.float32, q_dtype=jnp.float32):
+    """Random paged pool covering every context position, shuffled block ids;
+    returns (q, cache, block_tables, qpos)."""
+    rng = np.random.default_rng(seed)
+    b, h = len(ctx_lens), hkv * g
+    w = max(1, max((c + block_size - 1) // block_size for c in ctx_lens))
+    nb = 1 + sum((c + block_size - 1) // block_size for c in ctx_lens) + 2
+    shape = (nb, block_size, hkv, dh)
+    if cache_dtype == jnp.int8:
+        cache = {
+            "k": jnp.asarray(rng.integers(-127, 128, shape), jnp.int8),
+            "v": jnp.asarray(rng.integers(-127, 128, shape), jnp.int8),
+            "k_scale": jnp.asarray(rng.uniform(0.005, 0.02, shape[:-1]), jnp.float32),
+            "v_scale": jnp.asarray(rng.uniform(0.005, 0.02, shape[:-1]), jnp.float32),
+        }
+    else:
+        cache = {
+            "k": jnp.asarray(rng.standard_normal(shape), cache_dtype),
+            "v": jnp.asarray(rng.standard_normal(shape), cache_dtype),
+        }
+    pool = list(rng.permutation(np.arange(1, nb)))
+    bt = np.zeros((b, w), np.int32)
+    for i, c in enumerate(ctx_lens):
+        for j in range((c + block_size - 1) // block_size):
+            bt[i, j] = pool.pop()
+    q = jnp.asarray(rng.standard_normal((b, chunk, h, dh)), jnp.float32).astype(q_dtype)
+    return q, cache, jnp.asarray(bt), _prefill_qpos(ctx_lens, chunk)
+
+
+def _prefill_ring_case(seed, *, ring_width, ctx_lens, chunk, hkv=2, g=2,
+                       dh=16, cache_dtype=jnp.float32, q_dtype=jnp.float32):
+    """Random per-slot rings in ring layout (position p at slot p % WR);
+    returns (q, k, v, kpos, qpos)."""
+    rng = np.random.default_rng(seed)
+    b, h = len(ctx_lens), hkv * g
+    k = jnp.asarray(rng.standard_normal((b, ring_width, hkv, dh)), cache_dtype)
+    v = jnp.asarray(rng.standard_normal((b, ring_width, hkv, dh)), cache_dtype)
+    kpos = np.full((b, ring_width), -1, np.int32)
+    for i, c in enumerate(ctx_lens):
+        for p in range(max(0, c - ring_width), c):
+            kpos[i, p % ring_width] = p
+    q = jnp.asarray(rng.standard_normal((b, chunk, h, dh)), jnp.float32).astype(q_dtype)
+    return q, k, v, jnp.asarray(kpos), _prefill_qpos(ctx_lens, chunk)
+
+
+def _assert_close(y_k, y_r, tol):
+    y_k = jnp.asarray(y_k, jnp.float32)
+    y_r = jnp.asarray(y_r, jnp.float32)
+    scale = float(jnp.max(jnp.abs(y_r))) or 1.0
+    assert float(jnp.max(jnp.abs(y_k - y_r))) / scale < tol
+
+
+@pytest.mark.parametrize("block_size,ctx_lens,chunk,g,cache_dtype", [
+    (4, (11, 3, 0), 5, 2, jnp.float32),    # ragged + idle row, mid-chunk
+    (8, (16, 7, 1), 8, 1, jnp.float32),    # MHA (g=1), exact block multiple
+    (4, (9, 2), 3, 4, jnp.float32),        # wide GQA group
+    (4, (13, 5, 0), 6, 2, jnp.float16),
+    (8, (12, 4), 7, 2, jnp.bfloat16),
+    (4, (10, 1, 0), 4, 2, jnp.int8),       # fused per-slot-scale dequant
+    (8, (17, 6), 9, 3, jnp.int8),
+])
+def test_prefill_attention_paged_parity(block_size, ctx_lens, chunk, g, cache_dtype):
+    """Streaming prefill kernel vs the gather oracle: block sizes × context
+    lens × chunk widths × GQA ratios × cache dtypes, with ragged tails,
+    empty rows and shuffled block tables."""
+    q_dtype = cache_dtype if cache_dtype in (jnp.float16, jnp.bfloat16) else jnp.float32
+    q, cache, bt, qpos = _prefill_paged_case(
+        block_size * 977 + chunk, block_size=block_size, ctx_lens=ctx_lens,
+        chunk=chunk, g=g, cache_dtype=cache_dtype, q_dtype=q_dtype)
+    y_k = prefill_attention_pallas(q, qpos, cache=cache, block_tables=bt,
+                                   q_tile=4, interpret=True)
+    y_r = ref.paged_attention(q, cache, bt, qpos)
+    tol = 1e-5 if q_dtype == jnp.float32 else 3e-2
+    _assert_close(y_k, y_r, tol)
+    for i, c in enumerate(ctx_lens):
+        if c == 0:  # idle rows are exactly zero on both paths
+            assert float(jnp.max(jnp.abs(jnp.asarray(y_k, jnp.float32)[i]))) == 0.0
+            assert float(jnp.max(jnp.abs(jnp.asarray(y_r, jnp.float32)[i]))) == 0.0
+
+
+@pytest.mark.parametrize("ring_width,ctx_lens,chunk,g,window,cache_dtype", [
+    (16, (11, 3, 0), 5, 2, 0, jnp.float32),    # full attention rings
+    (12, (23, 9), 6, 2, 8, jnp.float32),       # SWA: ring wraps, window masks
+    (8, (7, 2, 0), 4, 1, 4, jnp.float32),      # MHA + tiny window
+    (16, (14, 5), 7, 4, 6, jnp.float32),       # wide GQA group + window
+    (12, (19, 8, 1), 5, 2, 7, jnp.float16),
+    (16, (21, 4), 8, 2, 9, jnp.bfloat16),
+])
+def test_prefill_attention_ring_parity(ring_width, ctx_lens, chunk, g, window,
+                                       cache_dtype):
+    """Streaming prefill kernel vs the ring oracle: ring widths × context
+    lens × chunk widths × GQA ratios × sliding windows × cache dtypes,
+    including wrapped rings and empty rows."""
+    q_dtype = cache_dtype if cache_dtype in (jnp.float16, jnp.bfloat16) else jnp.float32
+    q, k, v, kpos, qpos = _prefill_ring_case(
+        ring_width * 389 + chunk, ring_width=ring_width, ctx_lens=ctx_lens,
+        chunk=chunk, g=g, cache_dtype=cache_dtype, q_dtype=q_dtype)
+    y_k = prefill_attention_pallas(q, qpos, k=k, v=v, kpos=kpos, window=window,
+                                   q_tile=3, kv_tile=5, interpret=True)
+    y_r = ref.ring_attention(q, k, v, qpos, kpos, window=window)
+    tol = 1e-5 if q_dtype == jnp.float32 else 3e-2
+    _assert_close(y_k, y_r, tol)
+
+
+def test_prefill_attention_all_idle_rows():
+    """A fully idle batch (every qpos -1) walks zero blocks and returns
+    exactly zero from the kernel and both oracles."""
+    q, cache, bt, _ = _prefill_paged_case(5, block_size=4, ctx_lens=(8, 3),
+                                          chunk=4)
+    qpos = jnp.full((2, 4), -1, jnp.int32)
+    for y in (prefill_attention_pallas(q, qpos, cache=cache, block_tables=bt),
+              ref.paged_attention(q, cache, bt, qpos)):
+        assert float(jnp.max(jnp.abs(y))) == 0.0
+    q, k, v, kpos, _ = _prefill_ring_case(6, ring_width=8, ctx_lens=(6, 2),
+                                          chunk=4)
+    for y in (prefill_attention_pallas(q, qpos, k=k, v=v, kpos=kpos),
+              ref.ring_attention(q, k, v, qpos, kpos)):
+        assert float(jnp.max(jnp.abs(y))) == 0.0
+
+
+def test_prefill_attention_dispatch_backends():
+    """ref and pallas-interpret agree through dispatch.prefill_attention for
+    both layouts (the policy chain the serve engine pins)."""
+    q, cache, bt, qpos = _prefill_paged_case(17, block_size=4,
+                                             ctx_lens=(9, 2, 0), chunk=4)
+    y_ref = dispatch.prefill_attention(q, qpos, cache=cache, block_tables=bt,
+                                       backend="ref")
+    y_pl = dispatch.prefill_attention(q, qpos, cache=cache, block_tables=bt,
+                                      backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    q, k, v, kpos, qpos = _prefill_ring_case(18, ring_width=10,
+                                             ctx_lens=(13, 4, 0), chunk=5)
+    y_ref = dispatch.prefill_attention(q, qpos, k=k, v=v, kpos=kpos, window=6,
+                                       backend="ref")
+    y_pl = dispatch.prefill_attention(q, qpos, k=k, v=v, kpos=kpos, window=6,
+                                      backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="exactly one layout"):
+        dispatch.prefill_attention(q, qpos, backend="ref")
+    with pytest.raises(ValueError, match="exactly one layout"):
+        dispatch.prefill_attention(q, qpos, cache=cache, block_tables=bt,
+                                   k=k, v=v, kpos=kpos, backend="ref")
+    with pytest.raises(ValueError, match="paged layout needs"):
+        dispatch.prefill_attention(q, qpos, cache=cache, backend="ref")
+    with pytest.raises(ValueError, match="ring layout needs"):
+        dispatch.prefill_attention(q, qpos, k=k, v=v, backend="ref")
+
+
+def test_prefill_ring_oracle_matches_dense_attention():
+    """The ring oracle vs models.modules.attention_dense on an unwrapped
+    (identity-layout) ring — ties the ragged per-sequence math back to the
+    attention used everywhere else, including the window mask."""
+    rng = np.random.default_rng(21)
+    ctx, chunk, hkv, g, dh, win = 9, 4, 2, 2, 16, 5
+    k = jnp.asarray(rng.standard_normal((1, ctx, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, ctx, hkv, dh)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, chunk, hkv * g, dh)), jnp.float32)
+    pos = jnp.arange(ctx, dtype=jnp.int32)
+    qpos = pos[None, ctx - chunk:]
+    y_o = ref.ring_attention(q, k, v, qpos, pos[None], window=win)
+    y_d = attention_dense(q, k, v, qpos=qpos[0], kpos=pos, causal=True,
+                          window=win)
+    np.testing.assert_allclose(np.asarray(y_o), np.asarray(y_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_chunk_session_parity_ref_vs_interpret():
+    """End-to-end: a full multi-layer chunked-prefill step (paged AND ring
+    state backends) produces matching logits under ref and pallas-interpret
+    — the exact programs serve.steps jits for the engine."""
+    from repro.configs import get_config
+    from repro.kernels.dispatch import backend_override
+    from repro.models import build_model
+    from repro.models.sessions import SessionSpec, make_session
+
+    cfg = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = SessionSpec(slots=2, max_len=32, prefill_chunk=8, block_size=4)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    pos = np.full((2, 8), -1, np.int32)
+    pos[0, :8] = np.arange(8)
+    pos[1, :3] = np.arange(3)  # ragged second row
+    pos = jnp.asarray(pos)
+    for backend in ("paged", "ring"):
+        session = make_session(cfg, spec, backend=backend)
+        state = session.init_state()
+        if backend == "paged":
+            bt = np.zeros((2, spec.table_width()), np.int32)
+            bt[0, :2], bt[1, :2] = (1, 2), (3, 4)
+            state = session.with_tables(state, bt)
+        outs = {}
+        for kb in ("ref", "pallas-interpret"):
+            with backend_override(kb):
+                logits, _ = session.prefill_chunk(params, state, toks, pos)
+            outs[kb] = np.asarray(logits)
+        np.testing.assert_allclose(outs["pallas-interpret"], outs["ref"],
+                                   rtol=2e-4, atol=2e-4)

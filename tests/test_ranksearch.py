@@ -31,3 +31,21 @@ def test_error_decreases_with_rank():
     w = np.random.randn(64, 64)
     errs = [tt_error(w, spec_for_layer(64, 64, rank=r, d=3)) for r in (2, 8, 32)]
     assert errs[0] > errs[1] > errs[2]
+
+
+def test_target_cr_tie_broken_by_lower_error():
+    """512x512 with ds=(2,3), ranks=(4,8) has two candidates tied at
+    CR 51.2 (d=2/r=4 and d=3/r=8); the docstring promises the tie resolves
+    to the lower reconstruction error when a weight is supplied."""
+    from repro.core.ttd import TTSpec
+
+    w = np.random.default_rng(7).standard_normal((512, 512))
+    c = search_spec(512, 512, target_cr=30.0, weight=w, ds=(2, 3), ranks=(4, 8))
+    tie_errs = []
+    for d in (2, 3):
+        for r in (4, 8):
+            sp = TTSpec.make(512, 512, r, d=d)
+            if abs(sp.compression_ratio() - c.cr) < 1e-9:
+                tie_errs.append(tt_error(w, sp))
+    assert len(tie_errs) >= 2, "expected a genuine CR tie in this sweep"
+    assert c.rel_error == pytest.approx(min(tie_errs))
