@@ -78,25 +78,41 @@ def _workload(n_requests: int, max_tokens: int):
              max_tokens) for i in range(n_requests)]
 
 
+def _pcts(h):
+    """{p50,p95,p99,mean} row from an obs histogram (None when absent)."""
+    if h is None or h.count == 0:
+        return {"p50": None, "p95": None, "p99": None, "mean": None}
+    return {"p50": h.percentile(0.50), "p95": h.percentile(0.95),
+            "p99": h.percentile(0.99), "mean": h.mean()}
+
+
 def _bench_engine(make_engine, workload):
+    from repro.obs import Observer
+
     # warmup engine runs the *whole workload* untimed so every program shape
     # (chunk grids, ragged decode) compiles before the timed run (step
     # programs are memoized per session type in serve.steps, so the timed
-    # engine below hits the trace cache)
-    warm = make_engine()
+    # engine below hits the trace cache); obs stays off for the warmup
+    warm = make_engine(False)
     for p, m in workload:
         warm.submit(p, max_tokens=m)
     warm.run()
-    eng = make_engine()
+    # timed run records into a fresh per-run registry (DESIGN.md §9)
+    obs = Observer()
+    eng = make_engine(obs)
     reqs = [eng.submit(p, max_tokens=m) for p, m in workload]
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = eng.run()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     assert len(done) == len(workload)
     toks = sum(len(r.out_tokens) for r in done)
     ftl = sum(r.t_first - r.t_submit for r in reqs) / len(reqs)
+    reg = obs.registry
+    assert reg.get("serve_tokens_total").value == toks
     return {"tokens": toks, "wall_s": wall, "tok_per_s": toks / wall,
-            "mean_first_token_s": ftl}
+            "mean_first_token_s": ftl,
+            "ttft_s": _pcts(reg.get("serve_ttft_seconds")),
+            "inter_token_s": _pcts(reg.get("serve_inter_token_seconds"))}
 
 
 def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
@@ -115,23 +131,26 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
     for label, arch, backend in SERVE_FAMILIES:
         cfg = get_config(arch, reduced=True).replace(
             compute_dtype="float32", param_dtype="float32")
-        # the chunked-prefill attention backend the engine's jitted steps
-        # resolve (first-token latency runs through this path).  The engines
-        # below are built with kernel_backend=None, so the attention dispatch
-        # sees no explicit arg, no override and no per-spec preference —
-        # mirror exactly that chain (role env > global env > device auto)
-        prefill_backend = dispatch.resolve_backend(None, role="attn_prefill")
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        # per-family counter reset so attention-free families (rwkv) report
+        # null instead of inheriting the previous family's resolution
+        dispatch.reset_dispatch_metrics()
         for slots in slot_counts:
             r = _bench_engine(
-                lambda: Engine(model, params, slots=slots, max_len=max_len,
-                               backend=backend, block_size=8,
-                               prefill_batch=min(slots, 4), prefill_chunk=8),
+                lambda obs: Engine(model, params, slots=slots, max_len=max_len,
+                                   backend=backend, block_size=8,
+                                   prefill_batch=min(slots, 4),
+                                   prefill_chunk=8, obs=obs),
                 workload)
+            # the attention backend the engine's programs *actually* baked in
+            # at trace time (kernels.dispatch records it at resolution), not
+            # a re-derivation of the policy chain the benchmark hopes matched
+            prefill_backend = dispatch.resolved_backend("attn_prefill")
+            p95 = r["ttft_s"]["p95"]
             report(f"   {label:12s} slots={slots}: {r['tok_per_s']:7.1f} tok/s  "
-                   f"first-token {r['mean_first_token_s']*1e3:7.1f}ms  "
-                   f"prefill={prefill_backend}")
+                   f"ttft mean {r['mean_first_token_s']*1e3:7.1f}ms "
+                   f"p95 {p95*1e3:7.1f}ms  prefill={prefill_backend}")
             rows.append({"family": label, "arch": arch, "slots": slots,
                          "prefill_attention_backend": prefill_backend, **r})
     rec = {

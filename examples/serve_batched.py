@@ -14,14 +14,23 @@ its state backends) and a recurrent family:
 
 and every request's greedy output is asserted token-identical to generating
 it alone via ``model.prefill`` + ``model.decode_step``.
+
+The runs are instrumented through ``repro.obs`` (DESIGN.md §9): each engine
+gets an :class:`~repro.obs.Observer`, the example prints p50/p95 TTFT from
+the metrics registry, and the first engine streams its scheduler trace
+(admit / prefill_chunk / decode_tick / finish events) to
+``serve_trace.jsonl`` — validate it with
+``python -m repro.obs --validate serve_trace.jsonl``.
 """
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.obs import Observer, ObsConfig, validate_jsonl
 from repro.serve.engine import Engine
 
 
@@ -39,21 +48,26 @@ def reference(model, params, prompt, n):
 
 def serve(engine, prompts):
     reqs = [engine.submit(p, max_tokens=12) for p in prompts]
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = engine.run()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     assert len(done) == len(prompts)
     toks = sum(len(r.out_tokens) for r in done)
-    ftl = sum(r.t_first - r.t_submit for r in reqs) / len(reqs)
+    # the same numbers, from the obs registry's bucketed histogram
+    ttft = engine.obs.registry.get("serve_ttft_seconds")
     print(f"  {engine.cfg.family:8s}/{engine.session.backend:9s}: "
           f"{toks} tokens in {wall:.2f}s ({toks / wall:.1f} tok/s, "
-          f"mean first-token {ftl * 1e3:.0f}ms)")
+          f"ttft p50 {ttft.percentile(0.5) * 1e3:.0f}ms "
+          f"p95 {ttft.percentile(0.95) * 1e3:.0f}ms)")
     return [r.out_tokens for r in reqs]
 
 
 def main():
     prompts = [[1 + i, 2, 3 + i] + list(range(4, 4 + i)) for i in range(8)]
     print(f"serving {len(prompts)} requests on 3 slots (CPU):")
+    trace_path = "serve_trace.jsonl"
+    Path(trace_path).unlink(missing_ok=True)  # the writer appends
+    first = True
     for arch, backends in (("tinyllama-1.1b", ("paged", "ring")),
                            ("rwkv6-7b", (None,))):
         cfg = get_config(arch, reduced=True).replace(
@@ -62,10 +76,17 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         expected = [reference(model, params, p, 12) for p in prompts]
         for backend in backends:
+            # the first engine also streams its scheduler trace to JSONL
+            obs = Observer(ObsConfig(jsonl_path=trace_path if first else None))
+            first = False
             out = serve(Engine(model, params, slots=3, max_len=96,
                                block_size=8, prefill_batch=2, prefill_chunk=8,
-                               backend=backend), prompts)
+                               backend=backend, obs=obs), prompts)
+            obs.close()
             assert out == expected, f"{arch}/{backend} diverged from reference"
+    errors = validate_jsonl(trace_path)
+    assert not errors, errors
+    print(f"wrote schema-valid scheduler trace to {trace_path}")
     print("OK (all backends token-identical to the one-request reference)")
 
 

@@ -10,7 +10,11 @@ from .dispatch import (  # noqa: F401
     ENV_VAR,
     backend_override,
     dense_linear,
+    dispatch_counts,
     int4_matmul,
+    kernel_metrics,
+    reset_dispatch_metrics,
     resolve_backend,
+    resolved_backend,
     tt_linear,
 )

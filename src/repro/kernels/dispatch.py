@@ -35,11 +35,13 @@ import contextlib
 import contextvars
 import os
 import re
+import time
 
 import jax
 import jax.numpy as jnp
 
 from ..core.ttd import TTSpec
+from ..obs import ENV_KERNEL_TIMING, MetricsRegistry
 from . import ref
 from .epilogue import apply_epilogue
 from .int4_matmul import int4_matmul_pallas
@@ -94,24 +96,89 @@ def resolve_backend(explicit: str | None = None, *, role: str = "",
 
 
 # ---------------------------------------------------------------------------
+# Dispatch observability (DESIGN.md §9).  ``resolve_backend`` runs at trace
+# time, so a "dispatch" here means one trace-time resolution (or one eager
+# call) — NOT one executed device launch of a cached jitted program.  That is
+# exactly what the consumers need: ``resolved_backend(role)`` answers "which
+# backend did the program that actually traced in this process bake in?",
+# replacing benchmark self-reports of the *requested* backend.  Counters and
+# (opt-in) wall-time histograms live in a module-local zero-dep registry so
+# recording costs a dict lookup + float add and never touches the device;
+# the ``REPRO_OBS_KERNEL_TIMING=1`` fence only ever fires on *eager* calls —
+# under a jit trace the inputs are Tracers and the fence is skipped, keeping
+# the no-device-syncs overhead contract.
+# ---------------------------------------------------------------------------
+_METRICS = MetricsRegistry()
+_LAST_RESOLVED: dict[str, str] = {}
+
+
+def kernel_metrics() -> MetricsRegistry:
+    """Registry holding ``kernel_dispatch_total{role,backend}`` counters and
+    (with ``REPRO_OBS_KERNEL_TIMING=1``) ``kernel_wall_seconds`` histograms."""
+    return _METRICS
+
+
+def resolved_backend(role: str) -> str | None:
+    """Backend most recently resolved for ``role`` in this process (what a
+    traced program actually baked in), or ``None`` if never dispatched."""
+    return _LAST_RESOLVED.get(role)
+
+
+def dispatch_counts() -> dict[tuple[str, str], int]:
+    """{(role, resolved backend): trace-time dispatch count}."""
+    return {(lab["role"], lab["backend"]): int(m.value)
+            for name, lab, m in _METRICS.collect()
+            if name == "kernel_dispatch_total"}
+
+
+def reset_dispatch_metrics() -> None:
+    _METRICS.reset()
+    _LAST_RESOLVED.clear()
+
+
+def _timing_t0(x):
+    """perf_counter start stamp, or None when timing is off / under a trace."""
+    if not os.environ.get(ENV_KERNEL_TIMING, "") or \
+            os.environ.get(ENV_KERNEL_TIMING) in ("0", "false", "no", "off"):
+        return None
+    if isinstance(x, jax.core.Tracer):
+        return None
+    return time.perf_counter()
+
+
+def _record_dispatch(role: str, backend: str, out, t0):
+    """Count the (role, backend) dispatch; fence + time it when requested."""
+    _LAST_RESOLVED[role] = backend
+    _METRICS.counter("kernel_dispatch_total", role=role, backend=backend).inc()
+    if t0 is not None:
+        jax.block_until_ready(out)
+        _METRICS.histogram("kernel_wall_seconds", role=role,
+                           backend=backend).observe(time.perf_counter() - t0)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Dispatched ops.  All accept (..., N) inputs (leading dims flattened for the
 # kernel grids) and the full epilogue operand set; all return x.dtype.
 # ---------------------------------------------------------------------------
 def dense_linear(x, w, *, scale=None, bias=None, residual=None,
-                 activation: str | None = None, backend: str | None = None):
+                 activation: str | None = None, backend: str | None = None,
+                 role: str = ""):
     """y = act(x W [* scale] [+ b]) [+ residual];  (…, N) @ (N, M).
 
     Epilogue runs on the f32 accumulator (XLA fuses it into the matmul);
-    ``backend`` is ignored — see module docstring.
+    ``backend`` is ignored — see module docstring (the dispatch counter
+    records the honest ``xla`` label).
     """
     del backend
+    t0 = _timing_t0(x)
     y = jax.lax.dot_general(
         x, w, (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     y = apply_epilogue(y, scale=scale, bias=bias, residual=residual,
                        activation=activation)
-    return y.astype(x.dtype)
+    return _record_dispatch(role or "dense", "xla", y.astype(x.dtype), t0)
 
 
 def tt_linear(x, cores, spec: TTSpec, *, scale=None, bias=None, residual=None,
@@ -119,18 +186,22 @@ def tt_linear(x, cores, spec: TTSpec, *, scale=None, bias=None, residual=None,
               block_b: int | None = None, role: str = ""):
     """(…, N) -> (…, M) through the staged TT contraction + fused epilogue."""
     backend = resolve_backend(backend, role=role)
+    t0 = _timing_t0(x)
     if backend == "ref":
         # keep leading dims intact: activation sharding (batch→data,
         # seq→model) propagates untouched through the stages (DESIGN.md §4)
-        return ref.tt_linear_bn_res(x, cores, spec, scale=scale, bias=bias,
-                                    residual=residual, activation=activation)
-    lead = x.shape[:-1]
-    xf = x.reshape(-1, spec.n_in)
-    rf = residual.reshape(-1, spec.n_out) if residual is not None else None
-    y = tt_linear_pallas(xf, cores, spec, scale=scale, bias=bias, residual=rf,
-                         activation=activation, block_b=block_b,
-                         interpret=(backend == "pallas-interpret"))
-    return y.reshape(*lead, spec.n_out)
+        y = ref.tt_linear_bn_res(x, cores, spec, scale=scale, bias=bias,
+                                 residual=residual, activation=activation)
+    else:
+        lead = x.shape[:-1]
+        xf = x.reshape(-1, spec.n_in)
+        rf = residual.reshape(-1, spec.n_out) if residual is not None else None
+        y = tt_linear_pallas(xf, cores, spec, scale=scale, bias=bias,
+                             residual=rf, activation=activation,
+                             block_b=block_b,
+                             interpret=(backend == "pallas-interpret"))
+        y = y.reshape(*lead, spec.n_out)
+    return _record_dispatch(role or "tt", backend, y, t0)
 
 
 def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,
@@ -144,12 +215,15 @@ def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,
     (Sq > 1) goes through :func:`prefill_attention` instead.
     """
     backend = resolve_backend(backend, role=role)
+    t0 = _timing_t0(q)
     if backend == "ref":
-        return ref.paged_attention(q[:, None], cache, block_tables,
-                                   qpos[:, None], sm_scale=sm_scale)[:, 0]
-    return paged_attention_pallas(q, cache, block_tables, qpos,
-                                  sm_scale=sm_scale,
-                                  interpret=(backend == "pallas-interpret"))
+        y = ref.paged_attention(q[:, None], cache, block_tables,
+                                qpos[:, None], sm_scale=sm_scale)[:, 0]
+    else:
+        y = paged_attention_pallas(q, cache, block_tables, qpos,
+                                   sm_scale=sm_scale,
+                                   interpret=(backend == "pallas-interpret"))
+    return _record_dispatch(role, backend, y, t0)
 
 
 def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
@@ -175,19 +249,23 @@ def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
         raise ValueError("paged layout needs both cache and block_tables")
     if ring and (k is None or v is None or kpos is None):
         raise ValueError("ring layout needs all of k, v and kpos")
+    t0 = _timing_t0(q)
     if paged:
         if backend == "ref":
-            return ref.paged_attention(q, cache, block_tables, qpos,
-                                       sm_scale=sm_scale, window=window)
-        return prefill_attention_pallas(
-            q, qpos, cache=cache, block_tables=block_tables, window=window,
-            sm_scale=sm_scale, interpret=(backend == "pallas-interpret"))
-    if backend == "ref":
-        return ref.ring_attention(q, k, v, qpos, kpos, window=window,
-                                  sm_scale=sm_scale)
-    return prefill_attention_pallas(
-        q, qpos, k=k, v=v, kpos=kpos, window=window, sm_scale=sm_scale,
-        interpret=(backend == "pallas-interpret"))
+            y = ref.paged_attention(q, cache, block_tables, qpos,
+                                    sm_scale=sm_scale, window=window)
+        else:
+            y = prefill_attention_pallas(
+                q, qpos, cache=cache, block_tables=block_tables, window=window,
+                sm_scale=sm_scale, interpret=(backend == "pallas-interpret"))
+    elif backend == "ref":
+        y = ref.ring_attention(q, k, v, qpos, kpos, window=window,
+                               sm_scale=sm_scale)
+    else:
+        y = prefill_attention_pallas(
+            q, qpos, k=k, v=v, kpos=kpos, window=window, sm_scale=sm_scale,
+            interpret=(backend == "pallas-interpret"))
+    return _record_dispatch(role, backend, y, t0)
 
 
 def int4_matmul(x, qweight, scales, *, group: int = 128, scale=None, bias=None,
@@ -195,14 +273,18 @@ def int4_matmul(x, qweight, scales, *, group: int = 128, scale=None, bias=None,
                 backend: str | None = None, role: str = ""):
     """(…, K) -> (…, M) through the w4a16 kernel + fused epilogue."""
     backend = resolve_backend(backend, role=role)
+    t0 = _timing_t0(x)
     if backend == "ref":
-        return ref.int4_matmul(x, qweight, scales, group=group, scale=scale,
-                               bias=bias, residual=residual,
-                               activation=activation)
-    lead = x.shape[:-1]
-    xf = x.reshape(-1, x.shape[-1])
-    rf = residual.reshape(-1, qweight.shape[0]) if residual is not None else None
-    y = int4_matmul_pallas(xf, qweight, scales, group=group, scale=scale,
-                           bias=bias, residual=rf, activation=activation,
-                           interpret=(backend == "pallas-interpret"))
-    return y.reshape(*lead, qweight.shape[0])
+        y = ref.int4_matmul(x, qweight, scales, group=group, scale=scale,
+                            bias=bias, residual=residual,
+                            activation=activation)
+    else:
+        lead = x.shape[:-1]
+        xf = x.reshape(-1, x.shape[-1])
+        rf = (residual.reshape(-1, qweight.shape[0])
+              if residual is not None else None)
+        y = int4_matmul_pallas(xf, qweight, scales, group=group, scale=scale,
+                               bias=bias, residual=rf, activation=activation,
+                               interpret=(backend == "pallas-interpret"))
+        y = y.reshape(*lead, qweight.shape[0])
+    return _record_dispatch(role or "int4", backend, y, t0)

@@ -123,16 +123,18 @@ def apply_linear(params: dict[str, Any], x: jax.Array, spec: LinearSpec,
     if spec.kind == "dense":
         y = dispatch.dense_linear(x, params["w"].astype(compute_dtype),
                                   scale=scale, bias=bias, residual=residual,
-                                  activation=activation, backend=backend)
+                                  activation=activation, backend=backend,
+                                  role=spec.role)
     elif spec.kind == "tt":
         y = dispatch.tt_linear(x, params["cores"], spec.tt, scale=scale,
                                bias=bias, residual=residual,
-                               activation=activation, backend=backend)
+                               activation=activation, backend=backend,
+                               role=spec.role)
     elif spec.kind == "int4":
         y = dispatch.int4_matmul(x, params["qweight"], params["scales"],
                                  group=spec.quant_group, scale=scale, bias=bias,
                                  residual=residual, activation=activation,
-                                 backend=backend)
+                                 backend=backend, role=spec.role)
     else:
         raise ValueError(spec.kind)
     return y

@@ -1,0 +1,149 @@
+"""repro.obs — observability for the serving/training stack (DESIGN.md §9).
+
+One :class:`Observer` bundles the three layers:
+
+* a :class:`~repro.obs.registry.MetricsRegistry` (counters / gauges /
+  mergeable fixed-bucket histograms with exact-to-one-bucket percentiles),
+* a :class:`~repro.obs.trace.Trace` of structured scheduler events
+  (monotonic timestamps, optionally streamed to JSONL),
+* optional ``jax.profiler`` trace annotations around dispatch regions.
+
+**Overhead contract:** everything is off by default.  Components take an
+``obs=None`` argument: ``None`` resolves to the process-default observer
+built from the environment (``REPRO_OBS`` unset → *no* observer — the
+disabled hot path is a single ``is None`` check, no allocation, no device
+syncs), ``False`` forces off, and an :class:`Observer` / enabled
+:class:`ObsConfig` turns instrumentation on explicitly.  Enabling obs adds
+host-side bookkeeping only; it never inserts a device sync the engine was
+not already doing (TTFT was always stamped after ``block_until_ready``).
+
+Env knobs (read once, at first ``default_observer()`` call):
+
+====================================  =======================================
+``REPRO_OBS=1``                       enable the process-default observer
+``REPRO_OBS_JSONL=<path>``            stream trace events to ``<path>``
+``REPRO_OBS_PROFILER=1``              ``jax.profiler`` annotations on
+                                      prefill/decode dispatch
+``REPRO_OBS_KERNEL_TIMING=1``         per-(role, backend) kernel wall-time
+                                      histograms in ``kernels.dispatch``
+                                      (fences with ``block_until_ready``;
+                                      eager calls only — never inside jit)
+``REPRO_OBS_POOL_EVERY=<n>``          sample pool gauges every n ticks (1)
+====================================  =======================================
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+from .export import (  # noqa: F401  (public re-exports)
+    JsonlWriter,
+    bench_summary,
+    prometheus_text,
+    read_jsonl,
+    validate_events,
+    validate_jsonl,
+)
+from .registry import (  # noqa: F401
+    DEFAULT_LATENCY_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    exp_buckets,
+)
+from .trace import Trace, annotate, maybe_annotate  # noqa: F401
+
+ENV_ENABLE = "REPRO_OBS"
+ENV_JSONL = "REPRO_OBS_JSONL"
+ENV_PROFILER = "REPRO_OBS_PROFILER"
+ENV_KERNEL_TIMING = "REPRO_OBS_KERNEL_TIMING"
+ENV_POOL_EVERY = "REPRO_OBS_POOL_EVERY"
+
+
+def _truthy(v: str | None) -> bool:
+    return (v or "").strip().lower() not in ("", "0", "false", "no", "off")
+
+
+@dataclass(frozen=True)
+class ObsConfig:
+    """What to record.  ``enabled=False`` means "no observer at all"."""
+
+    enabled: bool = True
+    jsonl_path: str | None = None      # stream trace events here
+    profiler_annotations: bool = False  # jax.profiler spans on dispatch
+    kernel_timing: bool = False         # fenced per-kernel wall histograms
+    pool_sample_every: int = 1          # ticks between pool gauge samples
+
+    @classmethod
+    def from_env(cls) -> "ObsConfig":
+        return cls(
+            enabled=_truthy(os.environ.get(ENV_ENABLE)),
+            jsonl_path=os.environ.get(ENV_JSONL) or None,
+            profiler_annotations=_truthy(os.environ.get(ENV_PROFILER)),
+            kernel_timing=_truthy(os.environ.get(ENV_KERNEL_TIMING)),
+            pool_sample_every=max(1, int(os.environ.get(ENV_POOL_EVERY, "1"))),
+        )
+
+
+class Observer:
+    """Live instrumentation handle: registry + trace (+ profiler spans)."""
+
+    def __init__(self, config: ObsConfig | None = None, *,
+                 registry: MetricsRegistry | None = None):
+        self.config = config if config is not None else ObsConfig()
+        self.registry = registry if registry is not None else MetricsRegistry()
+        writer = (JsonlWriter(self.config.jsonl_path)
+                  if self.config.jsonl_path else None)
+        self.trace = Trace(writer=writer)
+
+    def event(self, ev: str, t: float | None = None, **fields) -> dict:
+        return self.trace.emit(ev, t=t, **fields)
+
+    def annotate(self, name: str):
+        """Profiler span when ``profiler_annotations`` is on, else no-op."""
+        return maybe_annotate(name, self.config.profiler_annotations)
+
+    def close(self) -> None:
+        self.trace.close()
+
+
+_DEFAULT: list = []  # memo cell: [] = unresolved, [None | Observer] = resolved
+
+
+def default_observer() -> Observer | None:
+    """Process-default observer from the environment, memoized.
+
+    ``None`` unless ``REPRO_OBS`` is truthy — the disabled path must cost
+    one ``is None`` check at the call sites.
+    """
+    if not _DEFAULT:
+        cfg = ObsConfig.from_env()
+        _DEFAULT.append(Observer(cfg) if cfg.enabled else None)
+    return _DEFAULT[0]
+
+
+def reset_default_observer() -> None:
+    """Drop the memoized default (tests re-read the environment)."""
+    if _DEFAULT and _DEFAULT[0] is not None:
+        _DEFAULT[0].close()
+    _DEFAULT.clear()
+
+
+def resolve_observer(obs) -> Observer | None:
+    """Normalize a component's ``obs`` argument.
+
+    ``None`` → the env-driven process default; ``False`` → force-off;
+    an :class:`Observer` passes through; an :class:`ObsConfig` builds a
+    fresh observer (or ``None`` when ``enabled=False``).
+    """
+    if obs is None:
+        return default_observer()
+    if obs is False:
+        return None
+    if isinstance(obs, Observer):
+        return obs
+    if isinstance(obs, ObsConfig):
+        return Observer(obs) if obs.enabled else None
+    raise TypeError(f"obs must be None, False, ObsConfig or Observer; "
+                    f"got {type(obs).__name__}")

@@ -1,0 +1,4 @@
+"""CLI: ``python -m repro.obs --validate trace.jsonl`` (see export.main)."""
+from .export import main
+
+raise SystemExit(main())

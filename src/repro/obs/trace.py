@@ -1,0 +1,85 @@
+"""Structured scheduler event trace + optional ``jax.profiler`` annotations.
+
+The serving engine narrates its scheduling decisions as a flat stream of
+dict events — one per admit / prefill chunk / decode tick / preemption /
+finish / pool sample — each stamped with a **monotonic** timestamp
+(``time.perf_counter``; wall-clock never enters duration math, DESIGN.md §9)
+and a process-wide sequence number.  The stream is the ground truth the
+ordering-invariant tests replay (submit ≤ admit ≤ first token ≤ finish;
+every preempt is followed by a re-admission), and ``repro.obs.export``
+validates and persists it as JSONL.
+
+``annotate`` wraps a region in a ``jax.profiler.TraceAnnotation`` so the
+engine's prefill/decode dispatches show up as named spans in a TensorBoard
+/ Perfetto profile; it is import-light and a no-op-cost ``nullcontext``
+when disabled.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import time
+
+# Event types and their required per-type fields (beyond the common
+# ``ev`` / ``t`` / ``seq``).  ``repro.obs.export.EVENT_SCHEMA`` builds the
+# full field-type map from this table.
+EVENT_FIELDS: dict[str, tuple[str, ...]] = {
+    "submit": ("rid", "prompt_len", "max_tokens"),
+    "admit": ("rid", "slot", "tick", "n_tokens"),
+    "prefill_chunk": ("tick", "chunk", "n_chunks", "rids"),
+    "first_token": ("rid", "tick", "ttft_s"),
+    "decode_tick": ("tick", "active"),
+    "preempt": ("rid", "slot", "tick"),
+    "finish": ("rid", "tick", "reason", "n_out"),
+    "pool_sample": ("tick", "utilization", "free_blocks", "live_tokens",
+                    "active_slots"),
+}
+
+_seq = itertools.count()
+
+
+class Trace:
+    """Append-only event log with monotonic timestamps.
+
+    ``writer`` (anything with a ``write(dict)`` method — see
+    ``export.JsonlWriter``) receives every event as it is emitted; ``keep``
+    retains events in memory for in-process inspection (the default — the
+    fuzz replays read ``trace.events`` directly).
+    """
+
+    def __init__(self, writer=None, keep: bool = True):
+        self.events: list[dict] = []
+        self._writer = writer
+        self._keep = keep
+
+    def emit(self, ev: str, t: float | None = None, **fields) -> dict:
+        """Record one event; ``t`` defaults to ``perf_counter()`` now but may
+        be passed in so an event reuses a timestamp already taken (e.g. the
+        post-``block_until_ready`` TTFT stamp)."""
+        rec = {"ev": ev, "t": time.perf_counter() if t is None else t,
+               "seq": next(_seq), **fields}
+        if self._keep:
+            self.events.append(rec)
+        if self._writer is not None:
+            self._writer.write(rec)
+        return rec
+
+    def by_type(self, ev: str) -> list[dict]:
+        return [e for e in self.events if e["ev"] == ev]
+
+    def close(self) -> None:
+        if self._writer is not None and hasattr(self._writer, "close"):
+            self._writer.close()
+
+
+def annotate(name: str):
+    """``jax.profiler.TraceAnnotation`` region named ``name``.
+
+    Import is local so the pure-Python metrics path never pulls in jax.
+    """
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)
+
+
+def maybe_annotate(name: str, enabled: bool):
+    return annotate(name) if enabled else contextlib.nullcontext()

@@ -26,10 +26,21 @@ their capacity is the slot itself.
 First-token latency (``Request.t_first``) is stamped only after
 ``jax.block_until_ready`` on the prefill logits — timing the dispatch
 instead of the computation understates TTFT by the entire prefill on an
-async backend.
+async backend.  All timing fields are ``time.perf_counter()`` stamps
+(monotonic — a wall-clock step can never corrupt a latency); the only
+wall-clock value kept is the informational ``Request.t_submit_wall``.
+
+Observability (DESIGN.md §9): pass ``obs=`` an
+:class:`~repro.obs.Observer` / :class:`~repro.obs.ObsConfig` (or set
+``REPRO_OBS=1``) and the engine emits structured scheduler events
+(admit / prefill_chunk / decode_tick / preempt / finish / pool_sample),
+queue-time / TTFT / inter-token latency histograms, and block-pool
+utilization gauges.  Disabled (the default), the hot path pays one
+``is None`` check per site — no events, no allocation, no device syncs.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -46,8 +57,11 @@ from ..models.sessions import (
     canonical_cache_dtype,
     make_session,
 )
+from ..obs import resolve_observer
 from . import steps
 from .kv_cache import BlockManager, blocks_for, pack_block_tables
+
+_NULL_CTX = contextlib.nullcontext()  # reusable no-op span (obs disabled)
 
 
 @dataclass
@@ -59,9 +73,12 @@ class Request:
     enc_frames: Any = None  # (T_enc, D) encoder frames (enc-dec families)
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
+    # monotonic (perf_counter) stamps — duration math only ever uses these
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
+    # informational wall-clock submit time (never used in arithmetic)
+    t_submit_wall: float = 0.0
 
 
 class Engine:
@@ -81,7 +98,7 @@ class Engine:
                  cache_dtype=None, prefill_batch: int = 2,
                  prefill_chunk: int | None = None, greedy: bool = True,
                  temperature: float = 1.0, top_k: int = 0, seed: int = 0,
-                 kernel_backend: str | None = None):
+                 kernel_backend: str | None = None, obs=None):
         geometry = dict(slots=slots, max_len=max_len, block_size=block_size,
                         num_blocks=num_blocks, cache_dtype=cache_dtype,
                         prefill_chunk=prefill_chunk, backend=backend)
@@ -132,6 +149,24 @@ class Engine:
         self._prefill, self._decode, self._begin = steps.session_step_fns(
             self.session, kernel_backend)
 
+        # -- observability (obs=None -> env default; False -> force off) ------
+        self.obs = resolve_observer(obs)
+        self._tick_no = 0
+        self._t_last_tok: dict[int, float] = {}  # slot -> last token stamp
+        if self.obs is not None:
+            reg = self.obs.registry
+            self._h_queue = reg.histogram("serve_queue_seconds")
+            self._h_ttft = reg.histogram("serve_ttft_seconds")
+            self._h_intertok = reg.histogram("serve_inter_token_seconds")
+            self._c_tokens = reg.counter("serve_tokens_total")
+            self._c_ticks = reg.counter("serve_decode_ticks_total")
+            self._c_preempt = reg.counter("serve_preemptions_total")
+            self._g_active = reg.gauge("serve_active_slots")
+            if self.manager is not None:
+                self._g_util = reg.gauge("serve_pool_utilization")
+                self._g_free = reg.gauge("serve_pool_free_blocks")
+                self._g_live = reg.gauge("serve_pool_live_tokens")
+
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: list[int], max_tokens: int = 32,
                eos: int | None = None, enc_frames=None) -> Request:
@@ -153,9 +188,13 @@ class Engine:
                     f"request needs up to {need} blocks but the pool only "
                     f"has {self.manager.num_blocks - 1}")
         req = Request(self._next_rid, list(prompt), max_tokens, eos,
-                      enc_frames=enc_frames, t_submit=time.time())
+                      enc_frames=enc_frames, t_submit=time.perf_counter(),
+                      t_submit_wall=time.time())
         self._next_rid += 1
         self.queue.append(req)
+        if self.obs is not None:
+            self.obs.event("submit", t=req.t_submit, rid=req.rid,
+                           prompt_len=len(req.prompt), max_tokens=max_tokens)
         return req
 
     def pending(self) -> bool:
@@ -166,6 +205,26 @@ class Engine:
         prefill), then decode one token for every active sequence."""
         self._admit()
         self._decode_tick()
+        if self.obs is not None:
+            self._sample_pool()
+        self._tick_no += 1
+
+    def _sample_pool(self) -> None:
+        """Record pool-utilization gauges + a pool_sample event (obs on)."""
+        active = sum(r is not None for r in self.slot_req)
+        self._g_active.set(active)
+        if self.manager is None:
+            return
+        if self._tick_no % self.obs.config.pool_sample_every:
+            return
+        util = self.manager.utilization()
+        free = self.manager.num_free
+        live = self.manager.live_tokens()
+        self._g_util.set(util)
+        self._g_free.set(free)
+        self._g_live.set(live)
+        self.obs.event("pool_sample", tick=self._tick_no, utilization=util,
+                       free_blocks=free, live_tokens=live, active_slots=active)
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0
@@ -194,13 +253,24 @@ class Engine:
     def _emit(self, req: Request, tok: int) -> bool:
         """Record one sampled token; returns True when the request is done."""
         req.out_tokens.append(tok)
-        if (req.eos is not None and tok == req.eos) or \
-                len(req.out_tokens) >= req.max_tokens:
-            req.done = True
-            req.t_done = time.time()
-            self.finished.append(req)
+        if self.obs is not None:
+            self._c_tokens.inc()
+        if req.eos is not None and tok == req.eos:
+            self._finish(req, "eos")
+            return True
+        if len(req.out_tokens) >= req.max_tokens:
+            self._finish(req, "max_tokens")
             return True
         return False
+
+    def _finish(self, req: Request, reason: str) -> None:
+        req.done = True
+        req.t_done = time.perf_counter()
+        self.finished.append(req)
+        if self.obs is not None:
+            self.obs.event("finish", t=req.t_done, rid=req.rid,
+                           tick=self._tick_no, reason=reason,
+                           n_out=len(req.out_tokens))
 
     def _seq_tokens(self, req: Request) -> list[int]:
         """Tokens a (re-)admitted request must prefill: the prompt plus
@@ -278,6 +348,14 @@ class Engine:
             batch.append((free_slots.pop(0), req))
         if not batch:
             return
+        if self.obs is not None:
+            t_admit = time.perf_counter()
+            for s, req in batch:
+                self.obs.event("admit", t=t_admit, rid=req.rid, slot=s,
+                               tick=self._tick_no,
+                               n_tokens=len(self._seq_tokens(req)))
+                if not req.t_first:  # first admission, not a preempt replay
+                    self._h_queue.observe(t_admit - req.t_submit)
         self._reset_slots([s for s, _ in batch])
         if self.session.needs_encoder_ctx:
             for s, req in batch:
@@ -291,17 +369,34 @@ class Engine:
         prompts: list[list[int] | None] = [None] * self.slots
         for s, req in batch:
             prompts[s] = self._seq_tokens(req)
-        logits, self.state = steps.chunked_prefill(
-            self._prefill, self.params, self.state, prompts,
-            chunk=self.prefill_chunk)
-        # first-token latency: stamp only after the device finishes
-        jax.block_until_ready(logits)
-        t_ready = time.time()
+        on_chunk = None
+        if self.obs is not None:
+            rids = [req.rid for _, req in batch]
+
+            def on_chunk(c, n_chunks):
+                self.obs.event("prefill_chunk", tick=self._tick_no, chunk=c,
+                               n_chunks=n_chunks, rids=rids)
+        with (self.obs.annotate("repro/serve/prefill")
+              if self.obs is not None else _NULL_CTX):
+            logits, self.state = steps.chunked_prefill(
+                self._prefill, self.params, self.state, prompts,
+                chunk=self.prefill_chunk, on_chunk=on_chunk)
+            # first-token latency: stamp only after the device finishes
+            jax.block_until_ready(logits)
+        t_ready = time.perf_counter()
         for s, req in batch:
-            if not req.t_first:
+            fresh = not req.t_first
+            if fresh:
                 req.t_first = t_ready
+                if self.obs is not None:
+                    self._h_ttft.observe(t_ready - req.t_submit)
+                    self.obs.event("first_token", t=t_ready, rid=req.rid,
+                                   tick=self._tick_no,
+                                   ttft_s=t_ready - req.t_submit)
+            self._t_last_tok[s] = t_ready
             tok = self._sample(logits[s])
             if self._emit(req, tok):  # eos on first token / max_tokens=1
+                self._t_last_tok.pop(s, None)
                 if self.manager is not None:
                     self.manager.free(req.rid)
                 continue
@@ -322,6 +417,11 @@ class Engine:
             self.slot_req[s] = None
             self._admit_order.remove(s)
             self.queue.insert(0, req)
+            self._t_last_tok.pop(s, None)
+            if self.obs is not None:
+                self._c_preempt.inc()
+                self.obs.event("preempt", rid=req.rid, slot=s,
+                               tick=self._tick_no)
             return s
         return None
 
@@ -346,28 +446,42 @@ class Engine:
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return
+        if self.obs is not None:
+            self._c_ticks.inc()
+            self.obs.event("decode_tick", tick=self._tick_no,
+                           active=len(active))
         toks = np.zeros((self.slots, 1), np.int32)
         positions = np.full((self.slots,), -1, np.int32)
         for s in active:
             toks[s, 0] = self.slot_req[s].out_tokens[-1]
             positions[s] = self.slot_pos[s]
         self._sync_tables()
-        logits, self.state = self._decode(self.params, self.state,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(positions))
+        with (self.obs.annotate("repro/serve/decode")
+              if self.obs is not None else _NULL_CTX):
+            logits, self.state = self._decode(self.params, self.state,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(positions))
         for s in active:
             req = self.slot_req[s]
             tok = self._sample(logits[s])
             self.slot_pos[s] += 1
+            if self.obs is not None:
+                # tick-granular inter-token latency: the argmax/device_get in
+                # _sample already materialized this tick's logits, so the
+                # stamp costs no extra device sync
+                now = time.perf_counter()
+                last = self._t_last_tok.get(s)
+                if last is not None:
+                    self._h_intertok.observe(now - last)
+                self._t_last_tok[s] = now
             if self._emit(req, tok) or self.slot_pos[s] >= self.max_len - 1:
                 if not req.done:  # max_len frontier hit: force-finish
-                    req.done = True
-                    req.t_done = time.time()
-                    self.finished.append(req)
+                    self._finish(req, "max_len")
                 if self.manager is not None:
                     self.manager.free(req.rid)
                 self.slot_req[s] = None
                 self._admit_order.remove(s)
+                self._t_last_tok.pop(s, None)
 
 
 class PagedEngine(Engine):

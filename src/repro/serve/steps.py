@@ -87,7 +87,8 @@ def session_step_fns(session: InferenceSession, kernel_backend: str | None = Non
     return _STEP_CACHE[key]
 
 
-def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int):
+def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int,
+                    on_chunk=None):
     """Prefill several prompts through repeated fixed-width chunk calls.
 
     prompts: list of ``slots`` token lists — row *i* is decode slot *i*;
@@ -97,6 +98,10 @@ def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int):
     prefill together in ``ceil(longest/chunk)`` jitted calls of one static
     shape.  Returns (last_logits (slots, V) f32 — garbage for idle rows —
     and the updated state).
+
+    ``on_chunk(chunk_index, n_chunks)``, when given, is called after each
+    chunk dispatch (the engine's obs layer emits ``prefill_chunk`` trace
+    events through it; ``None`` — the default — costs nothing).
     """
     b = len(prompts)
     lens = [len(p) if p else 0 for p in prompts]
@@ -113,6 +118,8 @@ def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int):
         sl = slice(c * chunk, (c + 1) * chunk)
         logits, state = prefill_chunk_fn(params, state, jnp.asarray(toks[:, sl]),
                                          jnp.asarray(pos[:, sl]))
+        if on_chunk is not None:
+            on_chunk(c, n_chunks)
         for i, n in enumerate(lens):
             if n and c * chunk <= n - 1 < (c + 1) * chunk:
                 last[i] = logits[i, (n - 1) % chunk]

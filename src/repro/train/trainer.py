@@ -30,6 +30,7 @@ import numpy as np
 from ..checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from ..config import TrainConfig
 from ..data.pipeline import DataConfig, make_source
+from ..obs import resolve_observer
 from .step import TrainState
 
 log = logging.getLogger("repro.trainer")
@@ -57,6 +58,7 @@ class Trainer:
         straggler_factor: float = 3.0,
         on_straggler: Callable[[int, float, float], None] | None = None,
         state_shardings=None,
+        obs=None,
     ):
         self.train_step = train_step
         self.state = state
@@ -68,6 +70,15 @@ class Trainer:
         self.state_shardings = state_shardings
         self.report = TrainerReport()
         self._stop = False
+        # observability: same registry contract as the serving engine
+        # (DESIGN.md §9); obs=None -> env default, False -> force off
+        self.obs = resolve_observer(obs)
+        if self.obs is not None:
+            reg = self.obs.registry
+            self._h_step = reg.histogram("train_step_seconds")
+            self._g_tps = reg.gauge("train_tokens_per_second")
+            self._c_steps = reg.counter("train_steps_total")
+            self._c_restarts = reg.counter("train_restarts_total")
 
     # -- fault-tolerance hooks ------------------------------------------------
     def request_stop(self):
@@ -98,7 +109,8 @@ class Trainer:
         while self.report.steps_done < num_steps and not self._stop:
             step = self.current_step()
             batch = {k: jax.numpy.asarray(v) for k, v in self.data.batch(step).items()}
-            t0 = time.time()
+            # monotonic clock: wall-time steps must not corrupt step timing
+            t0 = time.perf_counter()
             try:
                 if fault_injector is not None:
                     fault_injector(step)
@@ -111,6 +123,8 @@ class Trainer:
             except Exception as e:  # noqa: BLE001 — any step failure
                 retries += 1
                 self.report.restarts += 1
+                if self.obs is not None:
+                    self._c_restarts.inc()
                 log.warning("step %d failed (%r); restore+retry %d/%d",
                             step, e, retries, self.max_retries)
                 if retries > self.max_retries:
@@ -119,10 +133,16 @@ class Trainer:
                     log.warning("no checkpoint to restore; retrying same step")
                 continue
 
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             self.report.step_times.append(dt)
             self.report.losses.append(loss)
             self.report.steps_done += 1
+            if self.obs is not None:
+                self._c_steps.inc()
+                self._h_step.observe(dt)
+                toks = getattr(batch.get("tokens"), "size", 0)
+                if toks and dt > 0:
+                    self._g_tps.set(toks / dt)
             if len(self.report.step_times) >= 5:
                 med = statistics.median(self.report.step_times[-50:])
                 if dt > self.straggler_factor * med:

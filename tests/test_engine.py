@@ -100,7 +100,8 @@ def test_t_first_stamped_after_device_sync(backend, monkeypatch):
     def slow_sync(x):
         out = real_sync(x)
         time.sleep(0.02)
-        sync_done.append(time.time())
+        # t_first is a perf_counter stamp — compare in the same clock domain
+        sync_done.append(time.perf_counter())
         return out
 
     monkeypatch.setattr(jax, "block_until_ready", slow_sync)
