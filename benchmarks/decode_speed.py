@@ -143,16 +143,22 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
                                    prefill_batch=min(slots, 4),
                                    prefill_chunk=8, obs=obs),
                 workload)
-            # the attention backend the engine's programs *actually* baked in
+            # the kernel backends the engine's programs *actually* baked in
             # at trace time (kernels.dispatch records it at resolution), not
-            # a re-derivation of the policy chain the benchmark hopes matched
+            # a re-derivation of the policy chain the benchmark hopes matched;
+            # recurrent families additionally report their scan role
             prefill_backend = dispatch.resolved_backend("attn_prefill")
+            scan_role = {"griffin": "rglru_scan", "rwkv": "wkv_scan"}.get(label)
+            scan_backend = (dispatch.resolved_backend(scan_role)
+                            if scan_role else None)
             p95 = r["ttft_s"]["p95"]
             report(f"   {label:12s} slots={slots}: {r['tok_per_s']:7.1f} tok/s  "
                    f"ttft mean {r['mean_first_token_s']*1e3:7.1f}ms "
-                   f"p95 {p95*1e3:7.1f}ms  prefill={prefill_backend}")
+                   f"p95 {p95*1e3:7.1f}ms  prefill={prefill_backend}"
+                   + (f"  scan={scan_backend}" if scan_role else ""))
             rows.append({"family": label, "arch": arch, "slots": slots,
-                         "prefill_attention_backend": prefill_backend, **r})
+                         "prefill_attention_backend": prefill_backend,
+                         "recurrent_scan_backend": scan_backend, **r})
     rec = {
         "workload": {"n_requests": n_requests, "max_tokens": max_tokens,
                      "max_len": max_len},

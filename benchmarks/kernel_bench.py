@@ -125,6 +125,52 @@ def _prefill_attention_rows(*, iters, smoke):
     return rows
 
 
+def _scan_rows(*, iters, smoke):
+    """Recurrent-scan kernels (RG-LRU / wkv) through ``dispatch.rglru_scan``
+    / ``dispatch.wkv_scan``: jnp oracles vs the fused Pallas kernels under
+    the interpreter, on a chunked-prefill-shaped call."""
+    rng = np.random.default_rng(1)
+    if smoke:
+        b, s, w, h, hd = 2, 8, 32, 2, 8
+    else:
+        b, s, w, h, hd = 4, 32, 256, 4, 32
+    rows = []
+
+    log_a = -jnp.abs(jnp.asarray(rng.standard_normal((b, s, w)), jnp.float32)) * 0.5
+    gx = jnp.asarray(rng.standard_normal((b, s, w)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, w)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def rglru(backend):
+        f = jax.jit(lambda a, g: dispatch.rglru_scan(a, g, h0, pos,
+                                                     backend=backend))
+        return f, (log_a, gx)
+
+    r = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    wd = jnp.asarray(1.0 / (1.0 + np.exp(-rng.standard_normal((b, s, h, hd)))),
+                     jnp.float32) * 0.98 + 0.01
+    u = jnp.asarray(rng.standard_normal((h, hd)), jnp.float32) * 0.1
+    s0 = jnp.asarray(rng.standard_normal((b, h, hd, hd)), jnp.float32) * 0.3
+
+    def wkv(backend):
+        f = jax.jit(lambda r, k: dispatch.wkv_scan(r, k, v, wd, u, s0, pos,
+                                                   backend=backend))
+        return f, (r, k)
+
+    for name, make, width in (("rglru_scan", rglru, w), ("wkv_scan", wkv, h * hd)):
+        f_ref, args = make("ref")
+        f_pl, _ = make("pallas-interpret")
+        y_ref, y_pl = f_ref(*args)[0], f_pl(*args)[0]
+        rows.append({"name": name, "kind": "recurrent_scan",
+                     "n_in": s, "n_out": width, "batch": b,
+                     "ref_us": _time(f_ref, *args, iters=iters),
+                     "pallas_interpret_us": _time(f_pl, *args, iters=iters),
+                     "max_rel_err": _rel_err(y_pl, y_ref)})
+    return rows
+
+
 def run_dispatch(report=print, *, batch=32, iters=3, smoke=False,
                  out_path="BENCH_kernels.json"):
     """Per-layer ref vs pallas-interpret through the dispatch layer."""
@@ -177,6 +223,7 @@ def run_dispatch(report=print, *, batch=32, iters=3, smoke=False,
                      "max_rel_err": _rel_err(y_pl, y_ref)})
 
     rows.extend(_prefill_attention_rows(iters=iters, smoke=smoke))
+    rows.extend(_scan_rows(iters=iters, smoke=smoke))
 
     # pallas-interpret timings are Python-interpreter wall-time — useful only
     # as a parity/rot gate.  Label them so e.g. the int4 row's apparent

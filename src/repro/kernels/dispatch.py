@@ -47,6 +47,8 @@ from .epilogue import apply_epilogue
 from .int4_matmul import int4_matmul_pallas
 from .paged_attention import paged_attention_pallas
 from .prefill_attention import prefill_attention_pallas
+from .scan_rglru import rglru_scan_pallas
+from .scan_wkv import wkv_scan_pallas
 from .tt_linear import tt_linear_pallas
 
 BACKENDS = ("ref", "pallas-interpret", "pallas")
@@ -228,6 +230,7 @@ def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,
 
 def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
                       v=None, kpos=None, window: int = 0, sm_scale=None,
+                      k_scale=None, v_scale=None,
                       backend: str | None = None, role: str = "attn_prefill"):
     """Ragged chunked-prefill attention over a paged pool or per-slot rings.
 
@@ -238,6 +241,10 @@ def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
     the Pallas backends run the fused streaming kernel
     (``kernels/prefill_attention.py``) — same policy chain as
     ``paged_attention``, resolved at trace time.
+
+    Ring layout optionally carries int8 ``k``/``v`` with per-entry-per-head
+    f32 ``k_scale``/``v_scale`` (B, Wr, Hkv) tables; dequantization is fused
+    into the kernel's tile loads.
     """
     backend = resolve_backend(backend, role=role)
     paged = cache is not None or block_tables is not None
@@ -249,6 +256,10 @@ def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
         raise ValueError("paged layout needs both cache and block_tables")
     if ring and (k is None or v is None or kpos is None):
         raise ValueError("ring layout needs all of k, v and kpos")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
+    if k_scale is not None and not ring:
+        raise ValueError("k_scale/v_scale are ring-layout only")
     t0 = _timing_t0(q)
     if paged:
         if backend == "ref":
@@ -260,12 +271,77 @@ def prefill_attention(q, qpos, *, cache=None, block_tables=None, k=None,
                 sm_scale=sm_scale, interpret=(backend == "pallas-interpret"))
     elif backend == "ref":
         y = ref.ring_attention(q, k, v, qpos, kpos, window=window,
-                               sm_scale=sm_scale)
+                               sm_scale=sm_scale, k_scale=k_scale,
+                               v_scale=v_scale)
     else:
         y = prefill_attention_pallas(
             q, qpos, k=k, v=v, kpos=kpos, window=window, sm_scale=sm_scale,
+            k_scale=k_scale, v_scale=v_scale,
             interpret=(backend == "pallas-interpret"))
     return _record_dispatch(role, backend, y, t0)
+
+
+def rglru_scan(log_a, gx, h0, pos=None, *, scan_dtype=None,
+               backend: str | None = None, role: str = "rglru_scan"):
+    """Fused RG-LRU recurrence ``h_t = a h_{t-1} + sqrt(1-a²)(i ⊙ u)``.
+
+    log_a/gx: (B, S, W) pre-gate log-decay and gated input; h0: (B, W) f32
+    carried state; pos: (B, S) absolute positions (``-1`` = padding step →
+    exact state passthrough; a fully ``-1`` row keeps ``h0`` bitwise).
+    Returns ``(h (B, S, W) scan_dtype, h_last (B, W) f32)``.  ``ref`` runs
+    the ``associative_scan`` oracle; the Pallas backends keep the state
+    resident on-chip (``kernels/scan_rglru.py``) — S == 1 takes the fused
+    masked decode-step kernel batching all slots.
+    """
+    if log_a.shape != gx.shape or log_a.ndim != 3:
+        raise ValueError(f"log_a/gx must both be (B, S, W); got "
+                         f"{log_a.shape} vs {gx.shape}")
+    if h0.shape != (log_a.shape[0], log_a.shape[2]):
+        raise ValueError(f"h0 must be (B, W) = {(log_a.shape[0], log_a.shape[2])}; "
+                         f"got {h0.shape}")
+    backend = resolve_backend(backend, role=role)
+    t0 = _timing_t0(log_a)
+    if backend == "ref":
+        out = ref.rglru_scan(log_a, gx, h0, pos, scan_dtype=scan_dtype)
+    else:
+        out = rglru_scan_pallas(log_a, gx, h0, pos, scan_dtype=scan_dtype,
+                                interpret=(backend == "pallas-interpret"))
+    return _record_dispatch(role, backend, out, t0)
+
+
+def wkv_scan(r, k, v, w, u, state0, pos=None, *, state_scale=None,
+             backend: str | None = None, role: str = "wkv_scan"):
+    """Fused RWKV6 wkv recurrence over per-(slot, head) matrix state.
+
+    r/k/v/w: (B, S, H, hd); u: (H, hd); state0: (B, H, hd, hd) f32 — or int8
+    with per-(slot, head) f32 ``state_scale`` (B, H) fused into the kernel's
+    state load/store; pos: (B, S) absolute positions (``-1`` = padding →
+    identity step; a fully ``-1`` row keeps state *and* scale bitwise).
+    Returns ``(y (B, S, H, hd) f32, new_state, new_scale-or-None)``.  S > 1
+    takes the chunked-parallel matmul form (short prompts are padded to a
+    chunk multiple, so a single chunk qualifies too); S == 1 the fused
+    masked decode step.
+    """
+    if r.shape != k.shape or r.shape != v.shape or r.shape != w.shape \
+            or r.ndim != 4:
+        raise ValueError("r/k/v/w must share one (B, S, H, hd) shape; got "
+                         f"{r.shape}/{k.shape}/{v.shape}/{w.shape}")
+    if state0.shape != (r.shape[0], r.shape[2], r.shape[3], r.shape[3]):
+        raise ValueError(f"state0 must be (B, H, hd, hd); got {state0.shape}")
+    if (state_scale is None) != (state0.dtype != jnp.int8):
+        raise ValueError("int8 state0 requires state_scale (and vice versa); "
+                         f"got state0 {state0.dtype} with state_scale "
+                         f"{'set' if state_scale is not None else 'None'}")
+    backend = resolve_backend(backend, role=role)
+    t0 = _timing_t0(r)
+    if backend == "ref":
+        out = ref.wkv_scan(r, k, v, w, u, state0, pos,
+                           state_scale=state_scale)
+    else:
+        out = wkv_scan_pallas(r, k, v, w, u, state0, pos,
+                              state_scale=state_scale,
+                              interpret=(backend == "pallas-interpret"))
+    return _record_dispatch(role, backend, out, t0)
 
 
 def int4_matmul(x, qweight, scales, *, group: int = 128, scale=None, bias=None,

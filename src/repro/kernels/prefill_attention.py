@@ -53,7 +53,8 @@ def _kernel(q_ref, qpos_ref, *refs, paged: bool, kv_tile: int, n_kv_tiles: int,
         kpos_ref = None
     else:
         kpos_ref, k_ref, v_ref = refs[0], refs[1], refs[2]
-        bt_ref = ks_ref = vs_ref = None
+        ks_ref, vs_ref = (refs[3], refs[4]) if quantized else (None, None)
+        bt_ref = None
     q = q_ref[0]  # (QT, H, Dh)
     qt, h, dh = q.shape
     g = h // n_kv_heads
@@ -86,6 +87,11 @@ def _kernel(q_ref, qpos_ref, *refs, paged: bool, kv_tile: int, n_kv_tiles: int,
                                               ).astype(jnp.float32)
             vb = jax.lax.dynamic_slice_in_dim(ring_v, j * kv_tile, kv_tile
                                               ).astype(jnp.float32)
+            if quantized:
+                kb = kb * jax.lax.dynamic_slice_in_dim(
+                    ks_ref[0], j * kv_tile, kv_tile)[..., None]
+                vb = vb * jax.lax.dynamic_slice_in_dim(
+                    vs_ref[0], j * kv_tile, kv_tile)[..., None]
             kpos = jax.lax.dynamic_slice_in_dim(ring_pos, j * kv_tile, kv_tile)
             valid = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
         valid &= qpos[:, None] >= 0
@@ -116,6 +122,8 @@ def prefill_attention_pallas(q: jax.Array, qpos: jax.Array, *,
                              v: jax.Array | None = None,
                              kpos: jax.Array | None = None,
                              window: int = 0, sm_scale: float | None = None,
+                             k_scale: jax.Array | None = None,
+                             v_scale: jax.Array | None = None,
                              q_tile: int = 64, kv_tile: int = 128,
                              interpret: bool = True) -> jax.Array:
     """Chunked-prefill attention over a paged pool or per-slot rings.
@@ -127,7 +135,8 @@ def prefill_attention_pallas(q: jax.Array, qpos: jax.Array, *,
       ``k_scale``/``v_scale`` ``(NB, BS, Hkv)`` for int8 pools;
       ``block_tables``: (B, W) int32 ordered logical→physical ids.
     * ring — ``k``/``v``: (B, WR, Hkv, Dh); ``kpos``: (B, WR) int32 absolute
-      key positions, ``-1`` = empty entry.
+      key positions, ``-1`` = empty entry; int8 rings carry per-entry-per-head
+      f32 ``k_scale``/``v_scale`` (B, WR, Hkv) dequantized in-tile.
 
     The chunk's own K/V must already be written (write-then-attend, as both
     ``paged_kv_update`` and ``ring_kv_update`` guarantee).  Returns
@@ -171,13 +180,16 @@ def prefill_attention_pallas(q: jax.Array, qpos: jax.Array, *,
         if k is None or v is None or kpos is None:
             raise ValueError("ring layout needs k, v and kpos")
         skv, hkv = k.shape[1], k.shape[2]
-        quantized = False
+        quantized = k_scale is not None
         kv_t = min(kv_tile, skv)
         pad_k = (-skv) % kv_t
         if pad_k:
             k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
             v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
             kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)), constant_values=-1)
+            if quantized:
+                k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k), (0, 0)))
+                v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k), (0, 0)))
         n_kv_tiles = k.shape[1] // kv_t
         wr = k.shape[1]
         in_specs += [
@@ -186,6 +198,12 @@ def prefill_attention_pallas(q: jax.Array, qpos: jax.Array, *,
             pl.BlockSpec((1, wr, hkv, dh), lambda i, j: (i, 0, 0, 0)),
         ]
         args += [kpos.astype(jnp.int32), k, v]
+        if quantized:
+            in_specs += [
+                pl.BlockSpec((1, wr, hkv), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((1, wr, hkv), lambda i, j: (i, 0, 0)),
+            ]
+            args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     out = pl.pallas_call(
         functools.partial(_kernel, paged=paged, kv_tile=kv_t,

@@ -6,6 +6,16 @@ Two independent references for the TT kernel:
   * ``tt_linear_dense``   — reconstruct the dense W from the cores and do a
     plain matmul (the ground truth the staged algorithm itself is tested
     against in tests/test_ttd.py).
+
+The recurrent-scan oracles (``rglru_scan`` for griffin's RG-LRU,
+``wkv_scan`` for RWKV6's wkv recurrence) also live here: they are the exact
+jnp math the model families used to carry inline, demoted to oracle status
+now that ``kernels/scan_rglru.py`` / ``kernels/scan_wkv.py`` provide the
+fused Pallas paths.  Both follow the serving position convention — ``pos``
+(B, S) int32 per-sequence absolute positions with ``-1`` = padding (state
+passes through untouched) — and both speak the int8 scale-table state format
+(per-row / per-(slot, head) f32 scales, quantize at store, dequantize at
+load; DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -96,21 +106,28 @@ def paged_attention(q: jax.Array, cache: dict, block_tables: jax.Array,
 
 def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, qpos: jax.Array,
                    kpos: jax.Array, *, window: int = 0,
-                   sm_scale: float | None = None) -> jax.Array:
+                   sm_scale: float | None = None, k_scale=None,
+                   v_scale=None) -> jax.Array:
     """Causal attention against per-slot ring caches (the ring-layout oracle).
 
     q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh); qpos: (B, Sq) / kpos:
     (B, Skv) per-sequence absolute positions (``-1`` = padding query → zero
-    output / empty ring entry → never attended).  Causal, optionally
-    sliding-window — the per-sequence counterpart of
+    output / empty ring entry → never attended).  ``k_scale``/``v_scale``
+    (B, Skv, Hkv) f32 dequantize int8 rings per-(entry, head).  Causal,
+    optionally sliding-window — the per-sequence counterpart of
     ``models.modules.attention_dense``, which the tests tie it back to.
     """
     b, sq, h, dh = q.shape
     hkv = k.shape[2]
     g = h // hkv
     sm_scale = sm_scale or (1.0 / math.sqrt(dh))
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[..., None]
+        v = v * v_scale[..., None]
     qh = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
-    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k.astype(jnp.float32)) * sm_scale
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k) * sm_scale
     mask = (kpos[:, None, :] >= 0) & (qpos[:, :, None] >= 0) \
         & (kpos[:, None, :] <= qpos[:, :, None])
     if window > 0:
@@ -120,9 +137,190 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, qpos: jax.Array,
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m) * maskb
     l = jnp.sum(p, axis=-1, keepdims=True)
-    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
     o = jnp.where(l > 0, o / jnp.maximum(l, 1e-30), 0.0)
     return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU gated recurrence (griffin).  Demoted from models/griffin.py:rg_lru —
+# the gate linears stay in the model; this is the scan itself.
+# ---------------------------------------------------------------------------
+def rglru_scan(log_a: jax.Array, gx: jax.Array, h0: jax.Array, pos=None,
+               *, scan_dtype=None):
+    """Gated linear recurrence ``h_t = a_t h_{t-1} + sqrt(1-a_t²) gx_t``.
+
+    log_a, gx: (B, S, W) f32 — pre-mask log decay (``-c·softplus(Λ)·r``) and
+    gated input (``i ⊙ u``); h0: (B, W) f32.  ``pos`` (B, S) int32 marks
+    padding steps with ``-1``: a masked step has a = 1 and no input
+    contribution, so the state passes through untouched; rows with no real
+    step return ``h0`` bitwise.  The scan carries ``scan_dtype`` operands
+    (default f32; griffin trains with the compute dtype — halves the scan's
+    memory traffic).  Returns (h (B, S, W) scan_dtype, h_last (B, W) f32).
+    """
+    f32 = jnp.float32
+    scan_dtype = scan_dtype or f32
+    log_a = log_a.astype(f32)
+    gx = gx.astype(f32)
+    h0 = h0.astype(f32)
+    if pos is not None:
+        m = (pos >= 0).astype(f32)[:, :, None]
+        log_a = log_a * m  # pads: log a = 0 -> a = 1
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gx
+    if pos is not None:
+        gated = gated * m  # pads contribute nothing
+    gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(scan_dtype), gated.astype(scan_dtype)), axis=1)
+    h_last = h[:, -1].astype(f32)
+    if pos is not None:
+        idle = (pos < 0).all(axis=1)  # fully-idle rows keep h0 bitwise
+        h_last = jnp.where(idle[:, None], h0, h_last)
+    return h, h_last
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 wkv recurrence.  ``wkv_scan_sequential`` / ``wkv_chunked`` are the
+# exact forms demoted from models/rwkv.py; ``wkv_scan`` is the dispatch-facing
+# oracle that adds the masking / pad-to-chunk / int8 scale-table contract.
+# ---------------------------------------------------------------------------
+WKV_CHUNK = 16  # chunked-parallel wkv: scan steps drop S -> ceil(S/WKV_CHUNK).
+# 16 keeps the within-chunk cumulative log-decay range <= 16*4.9 < 88 (f32
+# exp range) together with the decay floor below.
+WKV_LOG_DECAY_FLOOR = -4.9  # w >= 0.0075/step; state is ~0 within 3 steps
+# at the floor anyway, so the approximation is practically invisible.
+
+
+def wkv_scan_sequential(r, k, v, w, u, state0):
+    """Sequential recurrence over time (the ground-truth wkv form).
+
+    r,k,v,w: (B,S,H,hd);  u: (H,hd);  state0: (B,H,hd,hd) f32.
+    Returns y (B,S,H,hd) f32 and final state.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None] [..., None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state0, chunk=WKV_CHUNK):
+    """Chunked-parallel form of the wkv recurrence (Finch/GLA-style).
+
+    Within a chunk of length C, with per-channel cumulative log-decay
+    ``la_t = Σ_{τ≤t} log w_τ`` (la over *preceding* steps inside the chunk):
+
+        y_t = (r_t ⊙ e^{la_t}) S_chunk0
+              + Σ_{τ<t} [(r_t ⊙ e^{la_t}) · (k_τ ⊙ e^{-la_{τ+1}})] v_τ
+              + (r_t · (u ⊙ k_t)) v_t
+        S' = e^{la_C} ⊙ S + Σ_τ (k_τ ⊙ e^{la_C - la_{τ+1}})^T v_τ
+
+    turning S sequential steps into S/C scan steps of batched matmuls (MXU
+    work instead of a latency-bound loop).  Exact vs the sequential scan
+    (tests/test_rwkv_chunked.py); all math in f32.  ``S`` must be a multiple
+    of ``chunk`` — ``wkv_scan`` below pads ragged tails with identity steps.
+    """
+    b, s, h, hd = r.shape
+    nc = s // chunk
+    f32 = jnp.float32
+
+    def cshape(t):
+        return t.astype(f32).reshape(b, nc, chunk, h, hd)
+
+    rc, kc, vc = cshape(r), cshape(k), cshape(v)
+    lw = jnp.clip(jnp.log(jnp.maximum(cshape(w), 1e-38)), WKV_LOG_DECAY_FLOOR, 0.0)
+    la_inc = jnp.cumsum(lw, axis=2)  # la_{τ+1}: includes step τ's decay
+    la_exc = la_inc - lw  # la_t: decay accumulated before step t
+    la_end = la_inc[:, :, -1]  # (b, nc, h, hd)
+
+    r_tld = rc * jnp.exp(la_exc)
+    k_tld = kc * jnp.exp(-la_inc)
+    k_end = kc * jnp.exp(la_end[:, :, None] - la_inc)  # bounded (<= k)
+
+    scores = jnp.einsum("bnthd,bnshd->bnhts", r_tld, k_tld)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rc, u.astype(f32), kc)
+    intra = jnp.einsum("bnhts,bnshd->bnthd", scores, vc) + diag[..., None] * vc
+
+    def chunk_step(s_c, inp):
+        r_t, ke, vcc, lae = inp  # (b,chunk,h,hd) x3, (b,h,hd)
+        y_inter = jnp.einsum("bthk,bhkv->bthv", r_t, s_c)
+        s_new = s_c * jnp.exp(lae)[..., None] + jnp.einsum("bthk,bthv->bhkv", ke, vcc)
+        return s_new, y_inter
+
+    xs = (jnp.moveaxis(r_tld, 1, 0), jnp.moveaxis(k_end, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(la_end, 1, 0))
+    state, y_inter = jax.lax.scan(chunk_step, state0.astype(f32), xs)
+    y = intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(b, s, h, hd), state
+
+
+def quantize_state(state: jax.Array, axes=(-2, -1), eps: float = 1e-8):
+    """amax/127 int8 quantization of a recurrent state over ``axes``.
+
+    Returns (q int8, scale f32) with the scale shaped like ``state`` minus
+    the reduced axes — the scale-table format every scan backend shares
+    (DESIGN.md §10).
+    """
+    sc = jnp.maximum(jnp.max(jnp.abs(state), axis=axes), eps) / 127.0
+    q = jnp.round(state / jnp.expand_dims(sc, axes)).astype(jnp.int8)
+    return q, sc
+
+
+def wkv_scan(r, k, v, w, u, state0, pos=None, *, state_scale=None,
+             chunk: int = WKV_CHUNK):
+    """Masked wkv recurrence over one chunk call (the dispatch-facing oracle).
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd); state0: (B,H,hd,hd) f32, or int8 with
+    ``state_scale`` (B,H) f32 (dequantized at load, requantized at store).
+    ``pos`` (B,S) int32 marks padding with ``-1`` — a masked step has
+    k = 0 / w = 1, so the state passes through untouched; fully-idle rows
+    keep their stored int8 state (and scale) bitwise.  ``S > 1`` runs the
+    chunked-parallel form, padding ragged tails up to a ``chunk`` multiple
+    with identity steps (so a one-chunk prompt takes the matmul form instead
+    of the sequential scan); ``S == 1`` is the exact one-step decode update.
+    Returns (y (B,S,H,hd) f32, new_state, new_scale-or-None).
+    """
+    b, s, h, hd = r.shape
+    f32 = jnp.float32
+    if pos is not None:
+        m3 = (pos >= 0)[:, :, None, None]
+        k = jnp.where(m3, k, 0.0)  # pads write nothing into the state
+        w = jnp.where(m3, w, 1.0)  # ...and decay nothing away
+    s0 = state0.astype(f32)
+    if state_scale is not None:
+        s0 = s0 * state_scale[..., None, None]
+    if s == 1:
+        y, st = wkv_scan_sequential(r, k, v, w, u, s0)
+    else:
+        pad = (-s) % chunk
+        if pad:
+            ext = ((0, 0), (0, pad), (0, 0), (0, 0))
+            r, k, v = (jnp.pad(t, ext) for t in (r, k, v))
+            w = jnp.pad(w, ext, constant_values=1.0)  # identity steps
+        y, st = wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
+        y = y[:, :s]
+    if state_scale is None:
+        return y, st, None
+    q, sc = quantize_state(st)
+    if pos is not None:
+        idle = (pos < 0).all(axis=1)  # (B,)
+        q = jnp.where(idle[:, None, None, None], state0, q)
+        sc = jnp.where(idle[:, None], state_scale, sc)
+    return y, q, sc
 
 
 def int4_matmul(x: jax.Array, qweight: jax.Array, scales: jax.Array,

@@ -7,10 +7,12 @@ RG-LRU (per channel):
     log a_t = -c · softplus(Λ) · r_t          (c = 8)
     h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
 
-computed with ``associative_scan`` over time (parallel depth log S) for
-train/prefill and a one-step update for decode.  The diagonal recurrence is
-already minimal — TTD applies to the in/out projections and the MLP
-(DESIGN.md §5).
+computed through ``kernels.dispatch.rglru_scan`` (ref | pallas-interpret |
+pallas): the ref oracle is an ``associative_scan`` over time (parallel depth
+log S); the Pallas kernel streams token tiles through on-chip state for
+prefill and fuses all slots' masked one-step updates for decode.  The
+diagonal recurrence is already minimal — TTD applies to the in/out
+projections and the MLP (DESIGN.md §5).
 
 Layer pattern (rec, rec, attn) is scanned in *groups* so the HLO stays one
 group-body deep; remainder layers form a tail segment.
@@ -26,6 +28,7 @@ import jax.numpy as jnp
 from ..config import ModelConfig
 from ..dist import constrain
 from ..dist.api import BATCH
+from ..kernels import dispatch
 from .modules import (
     apply_linear, apply_mlp, apply_norm, dt, embed_lookup, init_embed,
     init_linear, init_mlp, init_norm, linear_spec, mlp_specs, remat_wrap,
@@ -135,49 +138,30 @@ def causal_conv1d(p, u, conv_state=None):
     return y, u_pad[:, -(cw - 1):]
 
 
-def rg_lru(p, specs, u, h0, compute_dtype, mask=None):
+def rg_lru(p, specs, u, h0, compute_dtype, positions=None, scan_dtype=None):
     """u: (B,S,W); h0: (B,W) f32.  Returns h (B,S,W), h_last (B,W) f32.
 
-    Gate math runs in f32; the associative scan itself carries
-    ``compute_dtype`` operands (Griffin trains in bf16 on TPU — halves the
-    scan's memory traffic, hillclimb-2 iteration 3).
+    Gate math runs in f32; the scan itself carries ``compute_dtype``
+    operands (Griffin trains in bf16 on TPU — halves the scan's memory
+    traffic, hillclimb-2 iteration 3) — override with ``scan_dtype``.
 
-    ``mask`` (B,S) f32 marks padding steps with 0: a masked step has a=1 and
-    no input contribution, so the state passes through untouched (the
-    serving session's ragged chunked prefill).  Real steps multiply by 1.0 —
-    bitwise identical to the unmasked path.
+    ``positions`` (B,S) marks padding steps ``-1``: ``dispatch.rglru_scan``
+    gives a padded step a = 1 and no input contribution, so the state passes
+    through untouched (the serving session's ragged chunked prefill).  Real
+    steps are bitwise identical to the ``positions=None`` path.
     """
     r = jax.nn.sigmoid(apply_linear(p["gate_a"], u, specs["gate_a"], compute_dtype).astype(jnp.float32))
     i = jax.nn.sigmoid(apply_linear(p["gate_x"], u, specs["gate_x"], compute_dtype).astype(jnp.float32))
     log_a = -C_RGLRU * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
-    if mask is not None:
-        log_a = log_a * mask[:, :, None]  # pads: log a = 0 -> a = 1
-    a = jnp.exp(log_a)
-    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32))
-    if mask is not None:
-        gated = gated * mask[:, :, None]  # pads contribute nothing
-    gated = gated.at[:, 0].add(a[:, 0] * h0)
-
-    def combine(e1, e2):
-        a1, b1 = e1
-        a2, b2 = e2
-        return a1 * a2, a2 * b1 + b2
-
-    scan_dtype = u.dtype
-    _, h = jax.lax.associative_scan(
-        combine, (a.astype(scan_dtype), gated.astype(scan_dtype)), axis=1)
-    return h, h[:, -1].astype(jnp.float32)
+    gx = i * u.astype(jnp.float32)
+    return dispatch.rglru_scan(log_a, gx, h0, positions,
+                               scan_dtype=scan_dtype or u.dtype)
 
 
 def rg_lru_step(p, specs, u, h0, compute_dtype):
-    """One-token update. u: (B,1,W); h0: (B,W) f32."""
-    r = jax.nn.sigmoid(apply_linear(p["gate_a"], u, specs["gate_a"], compute_dtype).astype(jnp.float32))
-    i = jax.nn.sigmoid(apply_linear(p["gate_x"], u, specs["gate_x"], compute_dtype).astype(jnp.float32))
-    log_a = -C_RGLRU * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
-    a = jnp.exp(log_a)[:, 0]
-    b = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32)))[:, 0]
-    h = a * h0 + b
-    return h[:, None], h
+    """One-token update. u: (B,1,W); h0: (B,W) f32.  S == 1 routes through
+    the fused masked decode-step path of ``dispatch.rglru_scan``."""
+    return rg_lru(p, specs, u, h0, compute_dtype, scan_dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -428,15 +412,26 @@ def init_session_state(cfg: ModelConfig, batch: int, max_len: int, chunk: int,
     wr = ring_width(cfg, max_len, chunk)
     n_groups, tail = pattern_plan(cfg)
     pat = _pat(cfg)
+    int8 = jnp.dtype(cache_dtype) == jnp.int8
 
     def rec_state(lead):
-        return {"h": jnp.zeros(lead + (batch, w), jnp.float32),
-                "conv": jnp.zeros(lead + (batch, cfg.conv_width - 1, w), cache_dtype)}
+        # the RG-LRU carry h stays f32 (it is the recurrence accumulator);
+        # int8 applies to the conv tail with a per-(slot, tap) scale table
+        st = {"h": jnp.zeros(lead + (batch, w), jnp.float32),
+              "conv": jnp.zeros(lead + (batch, cfg.conv_width - 1, w), cache_dtype)}
+        if int8:
+            st["conv_scale"] = jnp.full(lead + (batch, cfg.conv_width - 1),
+                                        1e-8 / 127.0, jnp.float32)
+        return st
 
     def attn_state(lead):
-        return {"k": jnp.zeros(lead + (batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
-                "v": jnp.zeros(lead + (batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
-                "pos": jnp.full(lead + (batch, wr), -1, jnp.int32)}
+        st = {"k": jnp.zeros(lead + (batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+              "v": jnp.zeros(lead + (batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+              "pos": jnp.full(lead + (batch, wr), -1, jnp.int32)}
+        if int8:
+            st["k_scale"] = jnp.zeros(lead + (batch, wr, cfg.n_kv_heads), jnp.float32)
+            st["v_scale"] = jnp.zeros(lead + (batch, wr, cfg.n_kv_heads), jnp.float32)
+        return st
 
     out: dict[str, Any] = {"tail": [rec_state(()) if k == "rec" else attn_state(())
                                     for k in tail]}
@@ -462,26 +457,42 @@ def _conv_state_masked(conv0, u, mask):
     return jnp.take_along_axis(full, idx[:, :, None], axis=1)
 
 
-def rec_block_session(p, specs, cfg: ModelConfig, x, state, mask, compute_dtype):
+def rec_block_session(p, specs, cfg: ModelConfig, x, state, positions,
+                      compute_dtype):
     """Position-addressed recurrent block: prefill chunk or decode step.
 
-    x: (B,S,D); state: {"h": (B,W) f32, "conv": (B,cw-1,W)}; mask: (B,S) f32
-    (0 = padding step — the state passes through untouched).
+    x: (B,S,D); state: {"h": (B,W) f32, "conv": (B,cw-1,W)} plus
+    ``"conv_scale"`` (B,cw-1) f32 when the conv tail is int8; positions:
+    (B,S) int32 (``-1`` = padding step — the state passes through untouched,
+    idle rows bitwise including the int8 payload + scale).
     """
+    mask = (positions >= 0).astype(jnp.float32)
+    conv_scale = state.get("conv_scale")
+    conv0 = state["conv"]
+    if conv_scale is not None:
+        conv0 = conv0.astype(jnp.float32) * conv_scale[..., None]
     hid = apply_norm(p["ln1"], x, cfg)
     u = apply_linear(p["in_x"], hid, specs["in_x"], compute_dtype)
     g = jax.nn.gelu(apply_linear(p["in_g"], hid, specs["in_g"], compute_dtype).astype(jnp.float32), approximate=True)
-    u_conv, _ = causal_conv1d(p, u, state["conv"])
+    u_conv, _ = causal_conv1d(p, u, conv0)
     h, h_last = rg_lru(p, specs, u_conv, state["h"].astype(jnp.float32),
-                       compute_dtype, mask=mask)
+                       compute_dtype, positions=positions)
     y = (h.astype(compute_dtype) * g.astype(compute_dtype))
     y = apply_linear(p["out"], y, specs["out"], compute_dtype,
                      residual=x).astype(x.dtype)
     hid = apply_norm(p["ln2"], y, cfg)
     y = apply_mlp(p["mlp"], hid, specs["mlp"], cfg, compute_dtype,
                   residual=y).astype(y.dtype)
-    new_conv = _conv_state_masked(state["conv"], u, mask)
-    return y, {"h": h_last, "conv": new_conv.astype(state["conv"].dtype)}
+    new_conv = _conv_state_masked(conv0, u, mask)
+    if conv_scale is None:
+        return y, {"h": h_last, "conv": new_conv.astype(state["conv"].dtype)}
+    nc = new_conv.astype(jnp.float32)
+    sc = jnp.maximum(jnp.max(jnp.abs(nc), axis=-1), 1e-8) / 127.0
+    q = jnp.round(nc / sc[..., None]).astype(jnp.int8)
+    idle = mask.sum(axis=1) == 0  # (B,): keep payload + scale bitwise
+    q = jnp.where(idle[:, None, None], state["conv"], q)
+    sc = jnp.where(idle[:, None], conv_scale, sc)
+    return y, {"h": h_last, "conv": q, "conv_scale": sc}
 
 
 def attn_block_session(p, aspecs, cfg: ModelConfig, x, cache, rope_cs, positions,
@@ -502,7 +513,6 @@ def attn_block_session(p, aspecs, cfg: ModelConfig, x, cache, rope_cs, positions
 def _session_stack(params, cfg: ModelConfig, state, x, positions, compute_dtype):
     from .transformer import _paged_rope
 
-    mask = (positions >= 0).astype(jnp.float32)
     rope_cs = _paged_rope(cfg, positions)
     n_groups, tail = pattern_plan(cfg)
     pat = _pat(cfg)
@@ -516,7 +526,7 @@ def _session_stack(params, cfg: ModelConfig, state, x, positions, compute_dtype)
             key = f"l{i}_{kind}"
             if kind == "rec":
                 h, ns = rec_block_session(gp[key], rspecs, cfg, h, gs[key],
-                                          mask, compute_dtype)
+                                          positions, compute_dtype)
             else:
                 h, ns = attn_block_session(gp[key], aspecs, cfg, h, gs[key],
                                            rope_cs, positions, compute_dtype)
@@ -529,7 +539,8 @@ def _session_stack(params, cfg: ModelConfig, state, x, positions, compute_dtype)
                                               (params["groups"], state["groups"]))
     for (kind, p_), s_ in zip(zip(tail, params.get("tail", [])), state["tail"]):
         if kind == "rec":
-            x, ns = rec_block_session(p_, rspecs, cfg, x, s_, mask, compute_dtype)
+            x, ns = rec_block_session(p_, rspecs, cfg, x, s_, positions,
+                                      compute_dtype)
         else:
             x, ns = attn_block_session(p_, aspecs, cfg, x, s_, rope_cs,
                                        positions, compute_dtype)

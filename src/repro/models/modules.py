@@ -358,7 +358,10 @@ def ring_kv_update(cache: dict, k_new, v_new, positions):
     """Scatter fresh K/V into per-slot ring caches at ``pos % ring_width``.
 
     cache: ``{"k","v": (B, WR, Hkv, Dh), "pos": (B, WR) int32}`` (``-1`` =
-    empty slot).  k_new/v_new: (B, S, Hkv, Dh); positions: (B, S) int32
+    empty slot), plus ``k_scale``/``v_scale`` ``(B, WR, Hkv)`` f32 for the
+    int8 ring dtype — each written entry gets a per-(entry, head) amax/127
+    scale, mirroring ``paged_kv_update``'s quantized pool write.
+    k_new/v_new: (B, S, Hkv, Dh); positions: (B, S) int32
     absolute positions, ``-1`` = padding (the write is dropped, so inactive
     rows never disturb a live ring).  The ring width ``WR`` must cover the
     attention window plus the widest chunk written in one call (the builder
@@ -369,13 +372,19 @@ def ring_kv_update(cache: dict, k_new, v_new, positions):
     valid = positions >= 0
     slot = jnp.where(valid, positions % wr, wr)  # wr is out-of-bounds -> drop
     bidx = jnp.broadcast_to(jnp.arange(positions.shape[0])[:, None], slot.shape)
-    return {
-        "k": cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype),
-                                           mode="drop"),
-        "v": cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype),
-                                           mode="drop"),
-        "pos": cache["pos"].at[bidx, slot].set(positions, mode="drop"),
-    }
+    out = {"pos": cache["pos"].at[bidx, slot].set(positions, mode="drop")}
+    for nm, x in (("k", k_new), ("v", v_new)):
+        buf = cache[nm]
+        if nm + "_scale" in cache:
+            x32 = x.astype(jnp.float32)
+            sc = jnp.maximum(jnp.max(jnp.abs(x32), axis=-1), 1e-8) / 127.0
+            q = jnp.round(x32 / sc[..., None]).astype(jnp.int8)
+            out[nm] = buf.at[bidx, slot].set(q, mode="drop")
+            out[nm + "_scale"] = cache[nm + "_scale"].at[bidx, slot].set(
+                sc, mode="drop")
+        else:
+            out[nm] = buf.at[bidx, slot].set(x.astype(buf.dtype), mode="drop")
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -8,10 +8,13 @@ Time-mix recurrence per head (state S ∈ R^{dk×dv}):
     y_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
 
 with per-token per-channel decay w_t = exp(-exp(w0 + tanh(x_w W_d1) W_d2))
-and token-shift ddlerp mixing (LoRA-modulated).  Train/prefill use the
-chunked-parallel wkv form (16-token chunks of batched matmuls, S/16 scan
-steps — MXU work instead of a latency-bound length-S loop; exact vs the
-sequential oracle); decode is the one-step update.
+and token-shift ddlerp mixing (LoRA-modulated).  The recurrence itself runs
+through ``kernels.dispatch.wkv_scan`` (ref | pallas-interpret | pallas):
+train/prefill take the chunked-parallel wkv form (16-token chunks of batched
+matmuls, S/16 scan steps — MXU work instead of a latency-bound length-S
+loop; exact vs the sequential oracle in ``kernels/ref.py``); decode is the
+fused one-step update.  The serving path optionally keeps the wkv state in
+int8 with per-(slot, head) scale tables fused into the kernel.
 """
 from __future__ import annotations
 
@@ -23,6 +26,8 @@ import jax.numpy as jnp
 from ..config import ModelConfig
 from ..dist import constrain
 from ..dist.api import BATCH
+from ..kernels import dispatch
+from ..kernels.ref import WKV_CHUNK, WKV_LOG_DECAY_FLOOR  # noqa: F401 (re-export)
 from .modules import (
     apply_linear, apply_norm, dt, embed_lookup, init_embed, init_linear,
     init_norm, linear_spec, remat_wrap, stack_init, unembed,
@@ -133,84 +138,11 @@ def _group_norm(p, y, n_heads, eps=1e-5):
 
 
 # ---------------------------------------------------------------------------
-# Time mix
+# Time mix.  The sequential and chunked-parallel wkv forms live in
+# ``kernels/ref.py`` (``wkv_scan_sequential`` / ``wkv_chunked``) as the
+# oracles behind ``dispatch.wkv_scan``; the fused Pallas kernel is
+# ``kernels/scan_wkv.py``.
 # ---------------------------------------------------------------------------
-def _wkv_scan(r, k, v, w, u, state0):
-    """Sequential recurrence over time.
-
-    r,k,v,w: (B,S,H,hd);  u: (H,hd);  state0: (B,H,hd,hd) f32.
-    Returns y (B,S,H,hd) f32 and final state.
-    """
-    def step(s, inp):
-        r_t, k_t, v_t, w_t = inp  # (B,H,hd)
-        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
-        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None] [..., None] * kv)
-        s_new = w_t[..., None] * s + kv
-        return s_new, y
-
-    rs, ks, vs, ws = (jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
-    state, ys = jax.lax.scan(step, state0, (rs, ks, vs, ws))
-    return jnp.moveaxis(ys, 0, 1), state
-
-
-WKV_CHUNK = 16  # chunked-parallel wkv: scan steps drop S -> S/WKV_CHUNK.
-# 16 keeps the within-chunk cumulative log-decay range <= 16*4.9 < 88 (f32
-# exp range) together with the decay floor below.
-WKV_LOG_DECAY_FLOOR = -4.9  # w >= 0.0075/step; state is ~0 within 3 steps
-# at the floor anyway, so the approximation is practically invisible.
-
-
-def _wkv_chunked(r, k, v, w, u, state0, chunk=WKV_CHUNK):
-    """Chunked-parallel form of the wkv recurrence (Finch/GLA-style).
-
-    Within a chunk of length C, with per-channel cumulative log-decay
-    ``la_t = Σ_{τ≤t} log w_τ`` (la over *preceding* steps inside the chunk):
-
-        y_t = (r_t ⊙ e^{la_t}) S_chunk0
-              + Σ_{τ<t} [(r_t ⊙ e^{la_t}) · (k_τ ⊙ e^{-la_{τ+1}})] v_τ
-              + (r_t · (u ⊙ k_t)) v_t
-        S' = e^{la_C} ⊙ S + Σ_τ (k_τ ⊙ e^{la_C - la_{τ+1}})^T v_τ
-
-    turning S sequential steps into S/C scan steps of batched matmuls (MXU
-    work instead of a latency-bound loop).  Exact vs the sequential scan
-    (tests/test_rwkv_chunked.py); all math in f32.
-    """
-    b, s, h, hd = r.shape
-    nc = s // chunk
-    f32 = jnp.float32
-
-    def cshape(t):
-        return t.astype(f32).reshape(b, nc, chunk, h, hd)
-
-    rc, kc, vc = cshape(r), cshape(k), cshape(v)
-    lw = jnp.clip(jnp.log(jnp.maximum(cshape(w), 1e-38)), WKV_LOG_DECAY_FLOOR, 0.0)
-    la_inc = jnp.cumsum(lw, axis=2)  # la_{τ+1}: includes step τ's decay
-    la_exc = la_inc - lw  # la_t: decay accumulated before step t
-    la_end = la_inc[:, :, -1]  # (b, nc, h, hd)
-
-    r_tld = rc * jnp.exp(la_exc)
-    k_tld = kc * jnp.exp(-la_inc)
-    k_end = kc * jnp.exp(la_end[:, :, None] - la_inc)  # bounded (<= k)
-
-    scores = jnp.einsum("bnthd,bnshd->bnhts", r_tld, k_tld)
-    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
-    scores = jnp.where(tri[None, None, None], scores, 0.0)
-    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rc, u.astype(f32), kc)
-    intra = jnp.einsum("bnhts,bnshd->bnthd", scores, vc) + diag[..., None] * vc
-
-    def chunk_step(s_c, inp):
-        r_t, ke, vcc, lae = inp  # (b,chunk,h,hd) x3, (b,h,hd)
-        y_inter = jnp.einsum("bthk,bhkv->bthv", r_t, s_c)
-        s_new = s_c * jnp.exp(lae)[..., None] + jnp.einsum("bthk,bthv->bhkv", ke, vcc)
-        return s_new, y_inter
-
-    xs = (jnp.moveaxis(r_tld, 1, 0), jnp.moveaxis(k_end, 1, 0),
-          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(la_end, 1, 0))
-    state, y_inter = jax.lax.scan(chunk_step, state0.astype(f32), xs)
-    y = intra + jnp.moveaxis(y_inter, 0, 1)
-    return y.reshape(b, s, h, hd), state
-
-
 def _last_real(x_prev, x, mask):
     """Last *real* token of the chunk per row (padding is tail-only); rows
     with no real tokens keep ``x_prev``.  x_prev: (B,1,D); x: (B,S,D);
@@ -221,15 +153,17 @@ def _last_real(x_prev, x, mask):
 
 
 def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
-             residual=None, mask=None):
+             residual=None, positions=None, state_scale=None):
     """x: (B,S,D); x_prev: (B,1,D) last token of previous chunk (zeros at t=0);
-    state0: (B,H,hd,hd).  Returns (y, last_x, new_state).  ``residual`` (the
+    state0: (B,H,hd,hd) f32 — or int8 with per-(slot, head) ``state_scale``.
+    Returns (y, last_x, new_state, new_scale-or-None).  ``residual`` (the
     block skip) fuses into the out-projection's epilogue (TTDLinear-Res).
 
-    ``mask`` (B,S) bool marks padding steps False (serving's ragged chunked
-    prefill): a masked step has decay 1 and k = 0, so the wkv state passes
-    through untouched, and the token-shift state keeps the last *real*
-    token.  Real steps are bitwise identical to the unmasked path.
+    ``positions`` (B,S) marks padding steps ``-1`` (serving's ragged chunked
+    prefill): ``dispatch.wkv_scan`` gives a padded step decay 1 and k = 0, so
+    the wkv state passes through untouched, and the token-shift state keeps
+    the last *real* token.  Real steps are bitwise identical to the unmasked
+    (``positions=None``) path.
 
     The wkv recurrence scans over time, so the seq dim must be LOCAL during
     the scan; r/k/v/w are resharded seq→heads around it (batch-only
@@ -238,6 +172,7 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
     EXPERIMENTS.md §Perf)."""
     b, s, d = x.shape
     h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    mask = None if positions is None else positions >= 0
     shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
     mixed = _ddlerp(p, x, shifted, compute_dtype)
     r = apply_linear(p["tm"]["r"], mixed["r"], specs["tm"]["r"], compute_dtype)
@@ -245,10 +180,6 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
     v = apply_linear(p["tm"]["v"], mixed["v"], specs["tm"]["v"], compute_dtype)
     g = jax.nn.silu(apply_linear(p["tm"]["g"], mixed["g"], specs["tm"]["g"], compute_dtype).astype(jnp.float32))
     w = _decay(p, mixed["w"], compute_dtype)
-    if mask is not None:
-        m3 = mask[:, :, None]
-        k = jnp.where(m3, k, 0.0)  # pads write nothing into the state
-        w = jnp.where(m3, w, 1.0)  # ...and decay nothing away
 
     def to_heads(t):
         t = constrain(t, BATCH, None, None)  # hop 1: gather seq
@@ -256,8 +187,9 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
         return constrain(t, BATCH, None, "model", None)  # hop 2: shard heads
 
     u = p["bonus_u"].astype(jnp.float32).reshape(h, hd)
-    wkv = _wkv_chunked if (s % WKV_CHUNK == 0 and s > WKV_CHUNK) else _wkv_scan
-    y, state = wkv(to_heads(r), to_heads(k), to_heads(v), to_heads(w), u, state0)
+    y, state, new_scale = dispatch.wkv_scan(
+        to_heads(r), to_heads(k), to_heads(v), to_heads(w), u, state0,
+        positions, state_scale=state_scale)
     y = constrain(y, BATCH, None, "model", None)
     y = _group_norm(p, y, h)  # per-head LN: local under head sharding
     y = y.astype(compute_dtype)
@@ -267,7 +199,7 @@ def time_mix(p, specs, cfg: ModelConfig, x, x_prev, state0, compute_dtype,
     y = apply_linear(p["tm"]["o"], y, specs["tm"]["o"], compute_dtype,
                      residual=residual)
     last_x = x[:, -1:] if mask is None else _last_real(x_prev, x, mask)
-    return y, last_x, state
+    return y, last_x, state, new_scale
 
 
 def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype, mask=None):
@@ -292,22 +224,37 @@ def channel_mix(p, specs, cfg: ModelConfig, x, x_prev, compute_dtype, mask=None)
 # ---------------------------------------------------------------------------
 # Blocks / model
 # ---------------------------------------------------------------------------
-def apply_block(p, specs, cfg: ModelConfig, x, state, compute_dtype, mask=None):
-    """state: {"wkv": (B,H,hd,hd), "x_tm": (B,1,D), "x_cm": (B,1,D)}."""
+def apply_block(p, specs, cfg: ModelConfig, x, state, compute_dtype,
+                positions=None):
+    """state: {"wkv": (B,H,hd,hd), "x_tm": (B,1,D), "x_cm": (B,1,D)} plus
+    ``"wkv_scale"`` (B,H) f32 when the wkv state is int8."""
+    mask = None if positions is None else positions >= 0
     h = apply_norm(p["ln1"], x, cfg)
-    y, last_tm, wkv = time_mix(p, specs, cfg, h, state["x_tm"], state["wkv"],
-                               compute_dtype, residual=x, mask=mask)
+    y, last_tm, wkv, wkv_scale = time_mix(
+        p, specs, cfg, h, state["x_tm"], state["wkv"], compute_dtype,
+        residual=x, positions=positions, state_scale=state.get("wkv_scale"))
     x = constrain(y.astype(x.dtype), BATCH, None, None)
     h = apply_norm(p["ln2"], x, cfg)
     y, last_cm = channel_mix(p, specs, cfg, h, state["x_cm"], compute_dtype,
                              mask=mask)
     x = x + y.astype(x.dtype)
     x = constrain(x, BATCH, None, None)
-    return x, {"wkv": wkv, "x_tm": last_tm, "x_cm": last_cm}
+    new_state = {"wkv": wkv, "x_tm": last_tm, "x_cm": last_cm}
+    if wkv_scale is not None:
+        new_state["wkv_scale"] = wkv_scale
+    return x, new_state
 
 
 def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
     h, hd = cfg.d_model // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    if jnp.dtype(dtype) == jnp.int8:  # scale-table wkv state (serving only)
+        return {
+            "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.int8),
+            "wkv_scale": jnp.full((cfg.n_layers, batch, h), 1e-8 / 127.0,
+                                  jnp.float32),
+            "x_tm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), jnp.float32),
+            "x_cm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), jnp.float32),
+        }
     return {
         "wkv": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
         "x_tm": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
@@ -316,7 +263,10 @@ def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
 
 
 def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
-            state=None, return_state=False, mask=None):
+            state=None, return_state=False, masked=False):
+    """``masked=True`` turns ``positions`` into the serving liveness mask
+    (``-1`` = padding step); training callers pass positions for RoPE-style
+    uniformity but the recurrence treats every step as real."""
     compute_dtype = dt(cfg.compute_dtype)
     b, s = tokens.shape
     x = embed_lookup(params["embed"], tokens, compute_dtype)
@@ -324,11 +274,12 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
     specs = rwkv_specs(cfg)
     if state is None:
         state = init_state(cfg, b, compute_dtype)
+    pos = positions if masked else None
 
     def body(carry, xs):
         layer_params, layer_state = xs
         y, new_state = apply_block(layer_params, specs, cfg, carry, layer_state,
-                                   compute_dtype, mask=mask)
+                                   compute_dtype, positions=pos)
         return y, new_state
 
     f = remat_wrap(body, remat)
@@ -381,12 +332,13 @@ def init_session_state(cfg: ModelConfig, batch: int, cache_dtype=jnp.float32):
 
 def prefill_session_chunk(params, cfg: ModelConfig, state, tokens, positions):
     """tokens: (B,C); positions: (B,C), ``-1`` = padding.  Returns logits
-    (B,C,V) f32 and the updated state."""
-    mask = positions >= 0
+    (B,C,V) f32 and the updated state.  int8 wkv state (+"wkv_scale") passes
+    through to the scan kernel untouched; float leaves compute in f32."""
     st = jax.tree.map(
-        lambda a: a.astype(jnp.float32) if a.dtype != jnp.int32 else a, state)
-    x, new_state = forward(params, cfg, tokens, state=st, return_state=True,
-                           mask=mask)
+        lambda a: a.astype(jnp.float32)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, state)
+    x, new_state = forward(params, cfg, tokens, positions, state=st,
+                           return_state=True, masked=True)
     logits = unembed(x, head_weight(params, cfg).T, dt(cfg.compute_dtype))
     new_state = jax.tree.map(lambda a, b: a.astype(b.dtype), new_state, state)
     return logits, new_state

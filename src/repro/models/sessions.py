@@ -266,6 +266,13 @@ FAMILY_BACKENDS: dict[str, tuple[str, ...]] = {
     "encdec": ("encdec",),
 }
 
+#: backends whose state carries per-slot scale tables, making
+#: ``cache_dtype='int8'`` lossless up to the payload's own rounding: paged
+#: pools and per-slot rings quantize each written K/V entry, the recurrent
+#: backends quantize the wkv/conv state through the scan kernels'
+#: fused scale-table load/store (the RG-LRU carry ``h`` stays f32).
+INT8_SCALED_BACKENDS = ("paged", "ring", "recurrent", "encdec")
+
 _SESSION_TYPES: dict[tuple[str, str], type[InferenceSession]] = {
     ("dense", "paged"): PagedKVSession,
     ("moe", "paged"): PagedKVSession,
@@ -319,9 +326,9 @@ def make_session(cfg_or_model, spec: SessionSpec | None = None, *,
             f"family {cfg.family!r} ({cfg.name}) has pos_type "
             f"{cfg.pos_type!r}; the {backend!r} backend supports rope|none")
     if canonical_cache_dtype(spec.cache_dtype) == "int8" \
-            and backend not in ("paged", "encdec"):
+            and backend not in INT8_SCALED_BACKENDS:
         raise NotImplementedError(
-            f"cache_dtype 'int8' needs the block pools' per-slot scale "
-            f"tables; the {backend!r} backend stores K/V unscaled (a raw "
-            "int8 cast would corrupt outputs) — use a float cache dtype")
+            f"cache_dtype 'int8' needs per-slot scale tables; the "
+            f"{backend!r} backend stores its state unscaled (a raw int8 "
+            "cast would corrupt outputs) — use a float cache dtype")
     return _SESSION_TYPES[cfg.family, backend](cfg, spec)

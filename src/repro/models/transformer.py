@@ -522,15 +522,23 @@ def ring_width(cfg: ModelConfig, max_len: int, chunk: int) -> int:
 
 def init_ring_cache(cfg: ModelConfig, batch: int, max_len: int, chunk: int,
                     cache_dtype=jnp.bfloat16):
-    """Stacked per-layer per-slot ring caches with per-sequence positions."""
+    """Stacked per-layer per-slot ring caches with per-sequence positions.
+    int8 rings carry per-(entry, head) f32 scale tables next to the payload
+    (``ring_kv_update`` writes them; the prefill kernel dequantizes
+    in-tile)."""
     wr = ring_width(cfg, max_len, chunk)
+    int8 = jnp.dtype(cache_dtype) == jnp.int8
 
     def one(n):
-        return {
+        c = {
             "k": jnp.zeros((n, batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
             "v": jnp.zeros((n, batch, wr, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
             "pos": jnp.full((n, batch, wr), -1, jnp.int32),
         }
+        if int8:
+            c["k_scale"] = jnp.zeros((n, batch, wr, cfg.n_kv_heads), jnp.float32)
+            c["v_scale"] = jnp.zeros((n, batch, wr, cfg.n_kv_heads), jnp.float32)
+        return c
 
     return [one(n) for n, _ in segment_plan(cfg)]
 
@@ -550,7 +558,9 @@ def attn_ring(params, specs, cfg: ModelConfig, x, rope_cs, cache, positions,
     new_cache = ring_kv_update(cache, k, v, positions)
     o = dispatch.prefill_attention(q, positions, k=new_cache["k"],
                                    v=new_cache["v"], kpos=new_cache["pos"],
-                                   window=cfg.window)
+                                   window=cfg.window,
+                                   k_scale=new_cache.get("k_scale"),
+                                   v_scale=new_cache.get("v_scale"))
     o = constrain(o.astype(compute_dtype), BATCH, None, "model", None)
     o = apply_linear(params["attn"]["wo"], o.reshape(b, s, cfg.q_dim),
                      specs.attn_d()["wo"], compute_dtype, residual=residual)

@@ -146,10 +146,17 @@ def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):
                 intent[-2] = "model"
             elif shape[-1] % n_model == 0:
                 intent[-1] = "model"
+    elif leaf in ("k_scale", "v_scale"):  # (..., B, W, Hkv) — rides its pool/ring
+        if nd >= 3:
+            intent[-3] = batch_axes
     elif leaf == "wkv":  # (..., B, H, dk, dv)
         if nd >= 4:
             intent[-4] = batch_axes
             intent[-3] = "model"
+    elif leaf == "wkv_scale":  # (..., B, H)
+        if nd >= 2:
+            intent[-2] = batch_axes
+            intent[-1] = "model"
     elif leaf == "h":  # (..., B, W)
         intent[-2] = batch_axes
         intent[-1] = "model"
@@ -157,6 +164,9 @@ def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):
         if nd >= 3:
             intent[-3] = batch_axes
             intent[-1] = "model"
+    elif leaf == "conv_scale":  # (..., B, cw-1)
+        if nd >= 2:
+            intent[-2] = batch_axes
     elif leaf in ("x_tm", "x_cm"):  # (..., B, 1, D)
         if nd >= 3:
             intent[-3] = batch_axes

@@ -9,6 +9,8 @@ from repro.kernels import dispatch, ref
 from repro.kernels.int4_matmul import int4_matmul_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.prefill_attention import prefill_attention_pallas
+from repro.kernels.scan_rglru import rglru_scan_pallas
+from repro.kernels.scan_wkv import wkv_scan_pallas
 from repro.kernels.tt_linear import pick_block_b, tt_linear_pallas
 from repro.models.modules import attention_dense
 
@@ -501,3 +503,238 @@ def test_prefill_chunk_session_parity_ref_vs_interpret():
             outs[kb] = np.asarray(logits)
         np.testing.assert_allclose(outs["pallas-interpret"], outs["ref"],
                                    rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-scan kernels (RG-LRU / wkv) — Pallas kernels vs the kernels/ref.py
+# oracles across dtypes × tile/chunk widths × ragged/idle rows, then ref vs
+# pallas-interpret through the dispatch layer and a full session-level sweep.
+# ---------------------------------------------------------------------------
+def _scan_pos(ctx_lens, s):
+    """(B, S) positions: row i holds ``min(ctx_lens[i], s)`` real steps then
+    -1 padding (0-length rows are fully idle)."""
+    pos = np.full((len(ctx_lens), s), -1, np.int32)
+    for i, c in enumerate(ctx_lens):
+        n = min(c, s)
+        pos[i, :n] = np.arange(n)
+    return jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("s,w,ctx_lens,scan_dtype,tt,wt", [
+    (8, 16, (8, 3, 0), jnp.float32, 4, 8),      # ragged + idle row
+    (16, 40, (16, 16), jnp.float32, 16, 128),   # full rows, tile wider than W
+    (7, 24, (7, 2, 0), jnp.float32, 4, 16),     # odd S padded to token tile
+    (12, 48, (12, 5), jnp.bfloat16, 8, 32),     # bf16 scan carries
+    (6, 8, (0, 0), jnp.float32, 2, 8),          # fully-idle batch
+])
+def test_rglru_scan_prefill_parity(s, w, ctx_lens, scan_dtype, tt, wt, key):
+    """Chunked-prefill RG-LRU kernel vs the associative-scan oracle across
+    scan dtypes × token/width tiles × ragged and fully-idle rows."""
+    b = len(ctx_lens)
+    k1, k2, k3 = jax.random.split(key, 3)
+    log_a = -jnp.abs(jax.random.normal(k1, (b, s, w))) * 0.5
+    gx = jax.random.normal(k2, (b, s, w))
+    h0 = jax.random.normal(k3, (b, w))
+    pos = _scan_pos(ctx_lens, s)
+    h_k, hl_k = rglru_scan_pallas(log_a, gx, h0, pos, scan_dtype=scan_dtype,
+                                  token_tile=tt, width_tile=wt, interpret=True)
+    h_r, hl_r = ref.rglru_scan(log_a, gx, h0, pos, scan_dtype=scan_dtype)
+    tol = 3e-2 if scan_dtype == jnp.bfloat16 else 1e-5
+    _assert_close(h_k, h_r, tol)
+    _assert_close(hl_k, hl_r, tol)
+    # idle rows keep their carried state bitwise (f32 h_last path)
+    for i, c in enumerate(ctx_lens):
+        if c == 0:
+            np.testing.assert_array_equal(np.asarray(hl_k[i]), np.asarray(h0[i]))
+            np.testing.assert_array_equal(np.asarray(hl_r[i]), np.asarray(h0[i]))
+
+
+def test_rglru_scan_no_positions_matches_masked_all_real(key):
+    """pos=None (training path) must equal an all-real position grid."""
+    b, s, w = 2, 8, 16
+    k1, k2, k3 = jax.random.split(key, 3)
+    log_a = -jnp.abs(jax.random.normal(k1, (b, s, w))) * 0.5
+    gx = jax.random.normal(k2, (b, s, w))
+    h0 = jax.random.normal(k3, (b, w))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h_n, hl_n = rglru_scan_pallas(log_a, gx, h0, None, interpret=True)
+    h_p, hl_p = rglru_scan_pallas(log_a, gx, h0, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(h_n), np.asarray(h_p), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(hl_n), np.asarray(hl_p), rtol=1e-6, atol=1e-6)
+
+
+def test_rglru_scan_decode_step_parity(key):
+    """Fused masked decode step (S == 1): active rows advance, inactive rows
+    keep their state bitwise, vs the oracle."""
+    b, w = 4, 24
+    k1, k2, k3 = jax.random.split(key, 3)
+    log_a = -jnp.abs(jax.random.normal(k1, (b, 1, w))) * 0.5
+    gx = jax.random.normal(k2, (b, 1, w))
+    h0 = jax.random.normal(k3, (b, w))
+    pos = jnp.asarray([[5], [-1], [0], [-1]], jnp.int32)
+    h_k, hl_k = rglru_scan_pallas(log_a, gx, h0, pos, width_tile=16,
+                                  interpret=True)
+    h_r, hl_r = ref.rglru_scan(log_a, gx, h0, pos)
+    _assert_close(h_k, h_r, 1e-6)
+    _assert_close(hl_k, hl_r, 1e-6)
+    for i in (1, 3):  # inactive slots: bitwise passthrough
+        np.testing.assert_array_equal(np.asarray(hl_k[i]), np.asarray(h0[i]))
+
+
+@pytest.mark.parametrize("s,h,hd,ctx_lens,chunk,int8", [
+    (16, 2, 8, (16, 7, 0), 16, False),    # one exact chunk + ragged + idle
+    (20, 2, 8, (20, 3), 16, False),       # ragged tail pads to 2 chunks
+    (5, 1, 16, (5, 0), 16, False),        # prompt shorter than one chunk
+    (24, 3, 8, (24, 11, 2), 8, False),    # narrow chunk, three slots
+    (16, 2, 8, (16, 5, 0), 16, True),     # int8 state round-trip
+    (9, 2, 16, (9, 1), 8, True),          # int8 + ragged pad
+])
+def test_wkv_scan_prefill_parity(s, h, hd, ctx_lens, chunk, int8, key):
+    """Chunked wkv prefill kernel vs the masked oracle across chunk widths ×
+    ragged/idle rows × f32/int8 state."""
+    b = len(ctx_lens)
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, hd)) * 2 - 1) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    pos = _scan_pos(ctx_lens, s)
+    if int8:
+        s0f = jax.random.normal(key, (b, h, hd, hd)) * 0.3
+        s0, sc0 = ref.quantize_state(s0f)
+    else:
+        s0 = jax.random.normal(key, (b, h, hd, hd)) * 0.3
+        sc0 = None
+    y_k, st_k, sc_k = wkv_scan_pallas(r, k, v, w, u, s0, pos, state_scale=sc0,
+                                      chunk=chunk, interpret=True)
+    y_r, st_r, sc_r = ref.wkv_scan(r, k, v, w, u, s0, pos, state_scale=sc0,
+                                   chunk=chunk)
+    _assert_close(y_k, y_r, 1e-5)
+    if int8:
+        # compare dequantized states; quantization boundaries may flip one
+        # int8 step where the f32 values straddle a rounding edge
+        d_k = np.asarray(st_k, np.float32) * np.asarray(sc_k)[..., None, None]
+        d_r = np.asarray(st_r, np.float32) * np.asarray(sc_r)[..., None, None]
+        atol = 2.0 * float(np.max(np.asarray(sc_r)))
+        np.testing.assert_allclose(d_k, d_r, atol=atol)
+        for i, c in enumerate(ctx_lens):
+            if c == 0:  # idle rows: int8 payload AND scale bitwise-preserved
+                np.testing.assert_array_equal(np.asarray(st_k[i]), np.asarray(s0[i]))
+                np.testing.assert_array_equal(np.asarray(sc_k[i]), np.asarray(sc0[i]))
+    else:
+        assert sc_k is None and sc_r is None
+        _assert_close(st_k, st_r, 1e-5)
+
+
+def test_wkv_scan_decode_step_parity(key):
+    """Fused masked decode step (S == 1) vs the sequential oracle, f32 and
+    int8 state, with inactive slots bitwise-preserving payload and scale."""
+    b, h, hd = 3, 2, 8
+    ks = jax.random.split(key, 5)
+    shape = (b, 1, h, hd)
+    r = jax.random.normal(ks[0], shape)
+    k = jax.random.normal(ks[1], shape)
+    v = jax.random.normal(ks[2], shape)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], shape)) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    pos = jnp.asarray([[4], [-1], [0]], jnp.int32)
+    s0f = jax.random.normal(key, (b, h, hd, hd)) * 0.3
+    y_k, st_k, _ = wkv_scan_pallas(r, k, v, w, u, s0f, pos, interpret=True)
+    y_r, st_r, _ = ref.wkv_scan(r, k, v, w, u, s0f, pos)
+    _assert_close(y_k, y_r, 1e-6)
+    _assert_close(st_k, st_r, 1e-6)
+
+    q0, sc0 = ref.quantize_state(s0f)
+    yq, stq, scq = wkv_scan_pallas(r, k, v, w, u, q0, pos, state_scale=sc0,
+                                   interpret=True)
+    assert stq.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(stq[1]), np.asarray(q0[1]))
+    np.testing.assert_array_equal(np.asarray(scq[1]), np.asarray(sc0[1]))
+
+
+def test_scan_dispatch_backends(key):
+    """ref and pallas-interpret agree through dispatch.rglru_scan /
+    dispatch.wkv_scan (the policy chain the serve engine pins), and the
+    dispatch-layer shape/scale validation raises."""
+    b, s, w = 2, 8, 16
+    k1, k2, k3 = jax.random.split(key, 3)
+    log_a = -jnp.abs(jax.random.normal(k1, (b, s, w))) * 0.5
+    gx = jax.random.normal(k2, (b, s, w))
+    h0 = jax.random.normal(k3, (b, w))
+    pos = _scan_pos((8, 3), s)
+    h_ref, hl_ref = dispatch.rglru_scan(log_a, gx, h0, pos, backend="ref")
+    h_pl, hl_pl = dispatch.rglru_scan(log_a, gx, h0, pos,
+                                      backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(h_pl), np.asarray(h_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl_pl), np.asarray(hl_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    h2, hd = 2, 8
+    ks = jax.random.split(key, 5)
+    shape = (b, s, h2, hd)
+    r = jax.random.normal(ks[0], shape)
+    kk = jax.random.normal(ks[1], shape)
+    v = jax.random.normal(ks[2], shape)
+    ww = jax.nn.sigmoid(jax.random.normal(ks[3], shape)) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (h2, hd)) * 0.1
+    s0 = jax.random.normal(key, (b, h2, hd, hd)) * 0.3
+    y_ref, st_ref, _ = dispatch.wkv_scan(r, kk, v, ww, u, s0, pos, backend="ref")
+    y_pl, st_pl, _ = dispatch.wkv_scan(r, kk, v, ww, u, s0, pos,
+                                       backend="pallas-interpret")
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_pl), np.asarray(st_ref),
+                               rtol=1e-5, atol=1e-5)
+
+    with pytest.raises(ValueError, match="log_a/gx"):
+        dispatch.rglru_scan(log_a, gx[:, :-1], h0, backend="ref")
+    with pytest.raises(ValueError, match="h0 must be"):
+        dispatch.rglru_scan(log_a, gx, h0[:, :-1], backend="ref")
+    with pytest.raises(ValueError, match="share one"):
+        dispatch.wkv_scan(r, kk[:, :-1], v, ww, u, s0, backend="ref")
+    with pytest.raises(ValueError, match="state0 must be"):
+        dispatch.wkv_scan(r, kk, v, ww, u, s0[:, :, :-1], backend="ref")
+    with pytest.raises(ValueError, match="state_scale"):
+        dispatch.wkv_scan(r, kk, v, ww, u, s0.astype(jnp.int8), backend="ref")
+    with pytest.raises(ValueError, match="state_scale"):
+        dispatch.wkv_scan(r, kk, v, ww, u, s0,
+                          state_scale=jnp.ones((b, h2)), backend="ref")
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "rwkv6-7b"])
+def test_recurrent_session_parity_ref_vs_interpret(arch):
+    """End-to-end: a full multi-layer recurrent session (griffin / rwkv)
+    produces matching prefill AND decode logits under ref and
+    pallas-interpret — the exact programs serve.steps jits for the engine."""
+    from repro.configs import get_config
+    from repro.kernels.dispatch import backend_override
+    from repro.models import build_model
+    from repro.models.sessions import SessionSpec, make_session
+
+    cfg = get_config(arch, reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    spec = SessionSpec(slots=2, max_len=32, prefill_chunk=8, block_size=4)
+    session = make_session(cfg, spec)
+    rng = np.random.default_rng(9)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    pos = np.full((2, 8), -1, np.int32)
+    pos[0, :8] = np.arange(8)
+    pos[1, :3] = np.arange(3)  # ragged second row
+    pos = jnp.asarray(pos)
+    dt = jnp.asarray([[7], [11]], jnp.int32)
+    dp = jnp.asarray([8, 3], jnp.int32)
+    outs = {}
+    for kb in ("ref", "pallas-interpret"):
+        state = session.init_state()
+        with backend_override(kb):
+            plog, state = session.prefill_chunk(params, state, toks, pos)
+            dlog, _ = session.decode_step(params, state, dt, dp)
+        outs[kb] = (np.asarray(plog), np.asarray(dlog))
+    np.testing.assert_allclose(outs["pallas-interpret"][0], outs["ref"][0],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs["pallas-interpret"][1], outs["ref"][1],
+                               rtol=2e-4, atol=2e-4)

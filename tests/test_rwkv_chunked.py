@@ -1,11 +1,15 @@
 """Chunked-parallel wkv == sequential scan (exactness of the Finch/GLA-style
-chunk factorization, including cross-chunk state carry and the bonus term)."""
+chunk factorization, including cross-chunk state carry and the bonus term).
+Both forms live in ``kernels/ref.py`` as the oracles behind
+``dispatch.wkv_scan``."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.rwkv import _wkv_chunked, _wkv_scan
+from repro.kernels.ref import wkv_chunked as _wkv_chunked
+from repro.kernels.ref import wkv_scan as _wkv_scan_masked
+from repro.kernels.ref import wkv_scan_sequential as _wkv_scan
 
 
 @pytest.mark.parametrize("b,s,h,hd,chunk", [
@@ -27,6 +31,29 @@ def test_chunked_matches_sequential(b, s, h, hd, chunk, key):
     y_chk, st_chk = _wkv_chunked(r, k, v, w, u, s0, chunk=chunk)
     np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(st_chk), np.asarray(st_seq), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s", [2, 5, 16, 20, 32])
+def test_wkv_scan_pads_short_prompts_to_parallel_form(s, key):
+    """Regression: the old eligibility test (``s % C == 0 and s > C``) sent a
+    sequence of exactly one chunk (s == 16) — and every ragged length — down
+    the 16-step sequential scan.  ``ref.wkv_scan`` now pads to a chunk
+    multiple with identity steps so every prefill length takes the parallel
+    matmul form, and stays parity-exact vs the sequential oracle."""
+    b, h, hd = 2, 2, 8
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, hd)) * 2 - 1) * 0.98 + 0.01
+    u = jax.random.normal(ks[4], (h, hd)) * 0.1
+    s0 = jax.random.normal(key, (b, h, hd, hd)) * 0.3
+
+    y_seq, st_seq = _wkv_scan(r, k, v, w, u, s0)
+    y, st, sc = _wkv_scan_masked(r, k, v, w, u, s0)
+    assert sc is None
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_seq), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_seq), rtol=2e-4, atol=2e-4)
 
 
 def test_chunked_with_strong_decay(key):

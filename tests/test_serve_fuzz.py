@@ -183,3 +183,34 @@ def test_serve_smoke_matrix():
     """One schedule per family — the CI pallas-interpret smoke matrix."""
     for family in FAMILY_ARCHS:
         _run_schedule(family, 100, chunks=(8,))
+
+
+@pytest.mark.parametrize("family,seed", [
+    ("dense", 201),    # int8 per-slot rings (k/v + scale tables)
+    ("griffin", 202),  # int8 conv tails + windowed rings, f32 RG-LRU carry
+    ("griffin", 203),
+    ("rwkv", 204),     # int8 wkv matrix state + scale tables
+    ("rwkv", 205),
+])
+def test_serve_fuzz_int8_schedule_invariance(family, seed):
+    """int8 ring/recurrent state is *scheduling-invariant*: a fuzzed
+    multi-slot schedule emits exactly the tokens each request gets alone
+    through a slots=1 int8 engine.  (int8 outputs are not bit-identical to
+    the f32 reference — quantization legitimately moves logits — so the
+    invariant under test is that co-scheduling, idle-row ride-alongs and
+    chunk interleaving never perturb a request's quantized state: idle rows
+    must preserve payload and scale bitwise.)"""
+    model, params, _ = _setup(family)
+    cfg = model.cfg
+    _, sched = _schedule(seed)
+    kw = dict(max_len=MAX_LEN, block_size=8, prefill_chunk=8,
+              cache_dtype="int8",
+              backend="ring" if family == "dense" else None)
+    eng = Engine(model, params, slots=3, prefill_batch=2, **kw)
+    got = [h.out_tokens for h in _drive(eng, sched, cfg, family)]
+    solo = []
+    for _, prompt, max_tokens, eos in sched:
+        e1 = Engine(model, params, slots=1, prefill_batch=1, **kw)
+        h, = _drive(e1, [[0, prompt, max_tokens, eos]], cfg, family)
+        solo.append(h.out_tokens)
+    assert got == solo, f"{family} seed {seed}: {got} != {solo}"

@@ -140,19 +140,52 @@ def test_chunked_prefill_all_empty_rows():
                 np.asarray(a), np.asarray(b)), state, state2)
 
 
-def test_int8_cache_rejected_for_unscaled_backends():
-    """int8 K/V needs the block pools' scale tables; ring/recurrent state
-    would raw-cast (silently corrupting served tokens) — construction must
-    fail loudly instead."""
+def test_int8_cache_accepted_behind_scale_tables():
+    """Every state backend now carries per-slot scale tables for int8 —
+    construction succeeds and the state exposes quantized payloads next to
+    f32 scales (the raw-cast corruption that forced the old rejection is
+    structurally impossible)."""
     import dataclasses
 
+    spec8 = dataclasses.replace(SPEC, cache_dtype="int8")
+    ring = make_session(_cfg("tinyllama-1.1b"), spec8, backend="ring")
+    rseg = ring.init_state()["kv"][0]
+    assert rseg["k"].dtype == jnp.int8
+    assert rseg["k_scale"].shape == rseg["k"].shape[:-1]
+    assert rseg["k_scale"].dtype == jnp.float32
+
+    rwkv_s = make_session(_cfg("rwkv6-7b"), spec8).init_state()
+    assert rwkv_s["wkv"].dtype == jnp.int8
+    assert rwkv_s["wkv_scale"].shape == rwkv_s["wkv"].shape[:3]
+    assert rwkv_s["x_tm"].dtype == jnp.float32  # token-shift tails stay float
+
+    grif_s = make_session(_cfg("recurrentgemma-2b"), spec8).init_state()
+    recs = [s for s in grif_s["tail"] if "conv" in s]
+    recs += [s for s in grif_s.get("groups", {}).values() if "conv" in s]
+    assert recs
+    for s in recs:
+        assert s["conv"].dtype == jnp.int8
+        assert s["conv_scale"].shape == s["conv"].shape[:-1]
+        assert s["h"].dtype == jnp.float32  # the RG-LRU carry stays f32
+
+    # block-pool backends keep supporting it (per-slot scale tables exist)
+    assert make_session(_cfg("tinyllama-1.1b"), spec8, backend="paged")
+
+
+def test_int8_cache_rejected_without_scale_support(monkeypatch):
+    """The hard error survives for any backend outside INT8_SCALED_BACKENDS
+    (a resolved backend without scale tables must fail at construction, not
+    corrupt tokens deep inside a jitted step)."""
+    import dataclasses
+
+    from repro.models import sessions as sess_mod
+
+    monkeypatch.setattr(sess_mod, "INT8_SCALED_BACKENDS", ("paged", "encdec"))
     spec8 = dataclasses.replace(SPEC, cache_dtype="int8")
     with pytest.raises(NotImplementedError, match="int8"):
         make_session(_cfg("tinyllama-1.1b"), spec8, backend="ring")
     with pytest.raises(NotImplementedError, match="int8"):
         make_session(_cfg("rwkv6-7b"), spec8)
-    # block-pool backends keep supporting it (per-slot scale tables exist)
-    assert make_session(_cfg("tinyllama-1.1b"), spec8, backend="paged")
 
 
 def test_paged_engine_alias_warns():
