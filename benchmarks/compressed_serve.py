@@ -1,0 +1,229 @@
+"""CR-vs-serving-speed pareto sweep for TT-compressed models (paper §V).
+
+Serves ``compress_model``-ed trees through the real unified engine
+(``repro.serve.engine``) for the paper-target configs and reports, per
+(config, compression variant) row: the Table-I CR numbers, obs-registry
+TTFT percentiles, decoded tokens/sec, and the kernel backend the traced
+programs actually baked in — the Fig. 9 / first-token-delay claim as a
+measurable pareto front.  Variants: dense baseline, TT linears, TT+int4,
+TT+TT-embedding (TensorGPT-style vocab-axis TT).  CPU wall-time on the
+reduced configs — a structural comparison, not TPU performance.
+
+    PYTHONPATH=src python benchmarks/compressed_serve.py
+    PYTHONPATH=src python benchmarks/compressed_serve.py --smoke
+    PYTHONPATH=src python benchmarks/compressed_serve.py \
+        --check-schema BENCH_compressed_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+from repro.config import QuantConfig, TTDConfig
+from repro.configs import get_config
+
+ARCHS = ("tinyllama-1.1b", "chatglm3-6b", "llama2-7b")
+VARIANTS = ("dense", "tt", "tt_int4", "tt_embed")
+
+
+def variant_cfgs(arch: str, variant: str):
+    """(dense source cfg, compression target cfg) for one sweep row."""
+    base = get_config(arch, reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    dense = base.replace(ttd=TTDConfig(enabled=False),
+                         quant=QuantConfig(enabled=False))
+    if variant == "dense":
+        return dense, dense
+    target = base  # reduced configs carry the TT recipe (rank 4, d 3)
+    if variant == "tt_int4":
+        target = target.replace(quant=QuantConfig(enabled=True, bits=4,
+                                                  group_size=32))
+    elif variant == "tt_embed":
+        target = target.replace(ttd=dataclasses.replace(target.ttd, embed=True))
+    return dense, target
+
+
+def _workload(n_requests: int, max_tokens: int):
+    return [([1 + (i % 7), 2, 3 + i] + list(range(4, 4 + (i * 3) % 9)),
+             max_tokens) for i in range(n_requests)]
+
+
+def _pcts(h):
+    if h is None or h.count == 0:
+        return {"p50": None, "p95": None, "p99": None, "mean": None}
+    return {"p50": h.percentile(0.50), "p95": h.percentile(0.95),
+            "p99": h.percentile(0.99), "mean": h.mean()}
+
+
+def _bench_engine(make_engine, workload):
+    from repro.obs import Observer
+
+    warm = make_engine(False)  # untimed full-workload warmup (compiles)
+    for p, m in workload:
+        warm.submit(p, max_tokens=m)
+    warm.run()
+    obs = Observer()
+    eng = make_engine(obs)
+    reqs = [eng.submit(p, max_tokens=m) for p, m in workload]
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == len(workload)
+    toks = sum(len(r.out_tokens) for r in done)
+    reg = obs.registry
+    assert reg.get("serve_tokens_total").value == toks
+    return {"tokens": toks, "wall_s": wall, "tok_per_s": toks / wall,
+            "mean_first_token_s":
+                sum(r.t_first - r.t_submit for r in reqs) / len(reqs),
+            "ttft_s": _pcts(reg.get("serve_ttft_seconds")),
+            "inter_token_s": _pcts(reg.get("serve_inter_token_seconds"))}
+
+
+def _cr_row(target_cfg):
+    from repro.core.compress import compression_report
+
+    rep = compression_report(target_cfg)
+    return {"block": rep.block_cr, "network": rep.network_cr,
+            "network_with_embed": rep.network_cr_with_embed,
+            "bits": rep.network_cr_bits}
+
+
+def _traced_backends():
+    """{role: backend} the programs traced in this row actually baked in."""
+    from repro.kernels import dispatch
+
+    return {role: dispatch.resolved_backend(role)
+            for role in sorted({r for r, _ in dispatch.dispatch_counts()})}
+
+
+def run(report=print, *, archs=ARCHS, variants=VARIANTS, n_requests=6,
+        max_tokens=6, slots=2, out_path="BENCH_compressed_serve.json"):
+    import jax
+
+    from repro.core.compress import compress_model
+    from repro.kernels import dispatch
+    from repro.models import build_model
+    from repro.serve.engine import Engine
+
+    workload = _workload(n_requests, max_tokens)
+    max_len = 96
+    rows = []
+    report(f"== compressed serve: {len(archs)} configs x {len(variants)} "
+           f"variants, {n_requests} requests x {max_tokens} tokens")
+    for arch in archs:
+        dense_cfg, _ = variant_cfgs(arch, "dense")
+        dense_model = build_model(dense_cfg)
+        dense_params = dense_model.init(jax.random.PRNGKey(0))
+        for variant in variants:
+            _, target = variant_cfgs(arch, variant)
+            params = (dense_params if variant == "dense"
+                      else compress_model(dense_params, dense_cfg, target))
+            model = build_model(target)
+            dispatch.reset_dispatch_metrics()
+            r = _bench_engine(
+                lambda obs: Engine(model, params, slots=slots, max_len=max_len,
+                                   block_size=8, prefill_batch=slots,
+                                   prefill_chunk=8, obs=obs),
+                workload)
+            cr = _cr_row(target)
+            backends = _traced_backends()
+            p95 = r["ttft_s"]["p95"]
+            report(f"   {arch:14s} {variant:8s} CR(net+emb) "
+                   f"{cr['network_with_embed']:5.2f}  {r['tok_per_s']:7.1f} "
+                   f"tok/s  ttft p50 {r['ttft_s']['p50']*1e3:7.1f}ms "
+                   f"p95 {p95*1e3:7.1f}ms  "
+                   f"prefill={backends.get('attn_prefill')}")
+            rows.append({"arch": arch, "variant": variant, "cr": cr,
+                         "backends": backends, **r})
+    rec = {
+        "workload": {"n_requests": n_requests, "max_tokens": max_tokens,
+                     "max_len": max_len, "slots": slots},
+        "note": "CPU wall-clock on the reduced configs: the CR-vs-latency "
+                "pareto structure of serving compress_model trees through "
+                "the unified engine (chunked prefill + ragged decode), not "
+                "TPU kernel performance.",
+        "rows": rows,
+    }
+    Path(out_path).write_text(json.dumps(rec, indent=1))
+    report(f"wrote {out_path}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI modes
+# ---------------------------------------------------------------------------
+def smoke(report=print):
+    """Compress a tiny config, serve it, assert tokens are well-formed."""
+    import jax
+
+    from repro.core.compress import compress_model
+    from repro.models import build_model
+    from repro.serve.engine import Engine
+
+    dense_cfg, target = variant_cfgs("tinyllama-1.1b", "tt_embed")
+    target = target.replace(quant=QuantConfig(enabled=True, bits=4,
+                                              group_size=32))
+    dense_model = build_model(dense_cfg)
+    params = compress_model(dense_model.init(jax.random.PRNGKey(0)),
+                            dense_cfg, target)
+    eng = Engine(build_model(target), params, slots=2, max_len=64,
+                 prefill_chunk=8)
+    reqs = [eng.submit([1 + i, 2, 3, 4 + i], max_tokens=5) for i in range(4)]
+    done = eng.run()
+    assert len(done) == len(reqs)
+    for r in done:
+        assert len(r.out_tokens) == 5, r.out_tokens
+        assert all(isinstance(t, int) and 0 <= t < target.vocab_size
+                   for t in r.out_tokens), r.out_tokens
+    report(f"smoke OK: {[r.out_tokens for r in done]}")
+
+
+def check_schema(path, report=print):
+    """Validate BENCH_compressed_serve.json against the acceptance shape."""
+    rec = json.loads(Path(path).read_text())
+    for key in ("workload", "note", "rows"):
+        assert key in rec, f"missing top-level key {key!r}"
+    rows = rec["rows"]
+    assert len({r["variant"] for r in rows}) >= 3, "need >= 3 variants"
+    assert len({r["arch"] for r in rows}) >= 2, "need >= 2 configs"
+    for r in rows:
+        ctx = f"row {r.get('arch')}/{r.get('variant')}"
+        for key in ("arch", "variant", "cr", "backends", "ttft_s",
+                    "tok_per_s", "tokens", "wall_s"):
+            assert key in r, f"{ctx}: missing {key!r}"
+        for key in ("block", "network", "network_with_embed", "bits"):
+            assert float(r["cr"][key]) >= 1.0, f"{ctx}: cr.{key} < 1"
+        for key in ("p50", "p95"):
+            assert r["ttft_s"][key] is not None and r["ttft_s"][key] > 0, \
+                f"{ctx}: ttft_s.{key} missing"
+        assert float(r["tok_per_s"]) > 0, f"{ctx}: tok_per_s"
+        assert r["backends"] and all(
+            isinstance(k, str) and isinstance(v, str)
+            for k, v in r["backends"].items()), f"{ctx}: backends"
+    report(f"schema OK: {path} ({len(rows)} rows, "
+           f"{len({r['variant'] for r in rows})} variants x "
+           f"{len({r['arch'] for r in rows})} configs)")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: compress + serve one tiny config, assert "
+                         "well-formed tokens")
+    ap.add_argument("--check-schema", metavar="PATH",
+                    help="CI: schema-validate an existing results file")
+    ap.add_argument("--out", default="BENCH_compressed_serve.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        smoke()
+    elif args.check_schema:
+        check_schema(args.check_schema)
+    else:
+        run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

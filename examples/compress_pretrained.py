@@ -1,22 +1,35 @@
-"""The paper's pipeline end-to-end at laptop scale (§II + §V.A):
+"""The paper's pipeline end-to-end at laptop scale (§II + §V.A + §V.C):
 
   1. pretrain a small *dense* LM,
-  2. TT-SVD-compress its linears (attn-O + MLP, paper recipe) + int4-quantize
-     the rest,
+  2. TT-SVD-compress its linears (attn-O + MLP, paper recipe) + the
+     embedding table (TensorGPT-style vocab-axis TT) + int4-quantize the
+     rest,
   3. print the Table-I-style CR report,
-  4. evaluate perplexity before/after, with a short core fine-tune.
+  4. evaluate perplexity before/after, with a short core fine-tune,
+  5. checkpoint the compressed tree *with its target cfg*, load it back,
+     and serve it through the unified engine (the compression → serving
+     handoff, DESIGN.md §11).
 
     PYTHONPATH=src python examples/compress_pretrained.py
 """
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import QuantConfig, TrainConfig, TTDConfig
 from repro.configs import get_config
-from repro.core.compress import compress_model, compression_report
+from repro.core.compress import (
+    compress_model,
+    compression_report,
+    load_compressed,
+    save_compressed,
+    validate_compressed_params,
+)
 from repro.data.pipeline import DataConfig, make_source
 from repro.models import build_model
+from repro.serve.engine import Engine
 from repro.train.losses import chunked_cross_entropy
 from repro.train.step import build_train_step, init_train_state
 
@@ -50,8 +63,8 @@ def main():
     print(f"  final train loss {float(m['loss']):.3f}")
     base_ppl = eval_ppl(model_d, state.params, src)
 
-    # --- the paper's compression recipe ---
-    cfg_t = cfg_d.replace(ttd=TTDConfig(enabled=True, rank=8, d=3),
+    # --- the paper's compression recipe (+ TensorGPT TT embedding) ---
+    cfg_t = cfg_d.replace(ttd=TTDConfig(enabled=True, rank=8, d=3, embed=True),
                           quant=QuantConfig(enabled=True, group_size=32))
     model_t = build_model(cfg_t)
     params_t = compress_model(state.params, cfg_d, cfg_t, svd_method="svd")
@@ -61,7 +74,7 @@ def main():
     for r in rep.roles:
         print(f"  {r.role:8s} {r.kind:5s} {r.n_in}x{r.n_out:<6d} CR={r.cr:8.2f}")
     print(f"  block CR {rep.block_cr:.2f}  network CR {rep.network_cr:.2f} "
-          f"(bits: {rep.network_cr_bits:.2f})")
+          f"(+embed: {rep.network_cr_with_embed:.2f}, bits: {rep.network_cr_bits:.2f})")
 
     ppl_t = eval_ppl(model_t, params_t, src)
     print(f"\nPPL: dense {base_ppl:.2f} -> compressed {ppl_t:.2f}")
@@ -70,6 +83,23 @@ def main():
     n_tt = sum(x.size for x in jax.tree.leaves(params_t))
     print(f"param count: {n_dense:,} -> {n_tt:,} "
           f"({n_dense / n_tt:.2f}x fewer numbers incl. int4 packing)")
+
+    # --- compression → serving handoff: the target cfg rides the ckpt ---
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        save_compressed(ckpt_dir, params_t, cfg_t)
+        params_s, cfg_s = load_compressed(ckpt_dir)
+        assert cfg_s == cfg_t  # the tree is only meaningful with *this* cfg
+        try:  # validating against the dense cfg names the offending leaves
+            validate_compressed_params(cfg_d, params_s)
+        except ValueError as e:
+            print(f"\nmismatch detection: {str(e).splitlines()[0]}")
+        eng = Engine(build_model(cfg_s), params=params_s, slots=2, max_len=64,
+                     prefill_chunk=8)
+        for i in range(3):
+            eng.submit([1 + i, 2, 3, 4 + i], max_tokens=6)
+        done = eng.run()
+        print("served compressed checkpoint:",
+              [r.out_tokens for r in done])
     print("OK")
 
 

@@ -26,6 +26,7 @@ from pathlib import Path
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..dist.collectives import reshard
@@ -93,6 +94,12 @@ def restore_checkpoint(ckpt_dir: str | Path, step: int, target_tree, *,
     manifest = json.loads((path / "manifest.json").read_text())
     with np.load(path / "shard_0.npz") as z:
         arrays = {k.replace("::", "/"): z[k] for k in z.files}
+    for name, a in arrays.items():
+        want = manifest["leaves"].get(name, {}).get("dtype")
+        if want and str(a.dtype) != want:
+            # npz stores extended dtypes (bfloat16) as raw void bytes;
+            # reinterpret through the dtype the manifest recorded
+            arrays[name] = a.view(jnp.dtype(want))
 
     names = [n for n, _ in _flatten_with_paths(target_tree)]
     missing = [n for n in names if n not in arrays]

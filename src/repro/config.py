@@ -52,6 +52,12 @@ class TTDConfig:
     # fraction of blocks compressed, from the end (paper: 15/28 and 19/32,
     # chosen blocks are TT'd, the rest stay dense/quant-only)
     first_tt_block: int = 0  # blocks [first_tt_block, n_layers) are TT'd
+    # TensorGPT-style TT compression of the embedding table: the (V, D)
+    # table is treated as the TT's (M, N) weight with the vocab on the
+    # output axis, so a row gather becomes a digit-indexed core contraction
+    embed: bool = False
+    embed_rank: int = 0  # 0 -> use `rank`
+    embed_d: int = 0  # 0 -> use `d`
 
     def override_for(self, role: str) -> TTLayerOverride | None:
         return dict(self.overrides).get(role)
@@ -147,6 +153,35 @@ class ModelConfig:
 
     def replace(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, **kw)
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    """JSON-serializable form of a ``ModelConfig`` (checkpoint manifests)."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: Mapping[str, Any]) -> ModelConfig:
+    """Inverse of :func:`config_to_dict`, tolerant of a JSON round trip
+    (tuples come back as lists)."""
+    d = dict(d)
+    ttd = d.pop("ttd", None)
+    quant = d.pop("quant", None)
+    if isinstance(ttd, Mapping):
+        t = dict(ttd)
+        t["roles"] = tuple(t.get("roles", ()))
+        t["overrides"] = tuple(
+            (role, ov if isinstance(ov, TTLayerOverride) else TTLayerOverride(
+                in_modes=tuple(ov["in_modes"]),
+                out_modes=tuple(ov["out_modes"]),
+                rank=ov.get("rank", 16)))
+            for role, ov in (tuple(pair) for pair in t.get("overrides", ())))
+        ttd = TTDConfig(**t)
+    if isinstance(quant, Mapping):
+        quant = QuantConfig(**quant)
+    for k in ("mrope_sections", "pattern"):
+        if d.get(k) is not None:
+            d[k] = tuple(d[k])
+    return ModelConfig(**d, ttd=ttd or TTDConfig(), quant=quant or QuantConfig())
 
 
 # ---------------------------------------------------------------------------

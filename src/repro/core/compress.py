@@ -30,8 +30,19 @@ from .ttd import TTSpec, cores_to_matrices, tt_svd
 # Weight conversion
 # ---------------------------------------------------------------------------
 def _convert_linear(p_dense: dict[str, Any], spec: LinearSpec, svd_method: str):
-    """p_dense: {"w": (..., n_in, n_out)[, "b"]} -> target params subtree."""
-    w = np.asarray(p_dense["w"], dtype=np.float32)
+    """p_dense: {"w": (..., n_in, n_out)[, "b"]} -> target params subtree.
+
+    An embedding table rides the same path: ``{"table": (V, D)}`` is a
+    transposed linear ``w`` (the TT's (M, N) weight has M = V), so the
+    shared ``flat[i].T`` below hands TT-SVD the (V, D) matrix directly.
+    """
+    if "table" in p_dense:
+        if spec.kind != "tt":
+            raise ValueError(
+                f"embedding tables only compress to TT cores, got {spec.kind!r}")
+        w = np.asarray(p_dense["table"], dtype=np.float32).T  # (D, V) ~ (n_in, n_out)
+    else:
+        w = np.asarray(p_dense["w"], dtype=np.float32)
     lead = w.shape[:-2]
     flat = w.reshape((-1,) + w.shape[-2:])
     out: dict[str, Any] = {}
@@ -151,7 +162,8 @@ class CompressionReport:
     block_comp: int = 0  # params of one compressed block
     n_blocks: int = 0
     n_tt_blocks: int = 0
-    embed_params: int = 0
+    embed_params: int = 0  # dense embedding storage (table counted once when tied)
+    embed_params_comp: int = 0  # after TT embed compression (== embed_params when off)
     block_bits_dense: int = 0
     block_bits_comp: int = 0
 
@@ -169,10 +181,10 @@ class CompressionReport:
 
     @property
     def network_cr_with_embed(self) -> float:
-        e = self.embed_params
-        total_dense = self.n_blocks * self.block_dense + e
+        total_dense = self.n_blocks * self.block_dense + self.embed_params
         total_comp = (self.n_tt_blocks * self.block_comp
-                      + (self.n_blocks - self.n_tt_blocks) * self.block_dense + e)
+                      + (self.n_blocks - self.n_tt_blocks) * self.block_dense
+                      + self.embed_params_comp)
         return total_dense / max(total_comp, 1)
 
     @property
@@ -196,16 +208,35 @@ def _collect_linear_specs(tree, prefix="") -> list[tuple[str, LinearSpec]]:
     return out
 
 
-def compression_report(cfg: ModelConfig, param_bits: int = 16) -> CompressionReport:
+_DTYPE_BITS = {"float32": 32, "bfloat16": 16, "float16": 16}
+
+
+def compression_report(cfg: ModelConfig,
+                       param_bits: int | None = None) -> CompressionReport:
     """Per-role + block + network CR for a transformer-family config
-    (the paper's Table I columns)."""
+    (the paper's Table I columns).
+
+    ``param_bits`` is the *dense baseline* storage width; by default it is
+    derived from ``cfg.param_dtype`` instead of a global 16 so a float32
+    config reports honest bit-CRs.  Mixed compressed kinds already count
+    their own widths per role (int4 weights 4 bits + f16 group scales, TT
+    cores ``param_bits``) via ``linear_param_bits``.
+    """
+    from ..models.modules import embed_spec
     from ..models.transformer import make_block_specs, segment_plan
 
+    if param_bits is None:
+        param_bits = _DTYPE_BITS.get(cfg.param_dtype, 32)
     rep = CompressionReport(name=cfg.name)
     rep.n_blocks = cfg.n_layers
     plan = segment_plan(cfg)
     rep.n_tt_blocks = sum(n for n, tt in plan if tt)
-    rep.embed_params = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    head = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    rep.embed_params = cfg.vocab_size * cfg.d_model + head
+    esp = embed_spec(cfg)
+    rep.embed_params_comp = (
+        (esp.tt.n_params() if esp is not None else cfg.vocab_size * cfg.d_model)
+        + head)  # untied head stays dense under TT embed compression
 
     comp_specs = make_block_specs(cfg, ttd_block=True)
     base_specs = make_block_specs(cfg.replace(ttd=cfg.ttd.__class__(enabled=False),
@@ -238,3 +269,116 @@ def compression_report(cfg: ModelConfig, param_bits: int = 16) -> CompressionRep
         rep.block_bits_dense += m * linear_param_bits(sp0, param_bits)
         rep.block_bits_comp += m * rr.bits
     return rep
+
+
+# ---------------------------------------------------------------------------
+# Compression → serving handoff.  A compressed tree is only interpretable
+# together with the target cfg it was compressed *for* (the specs ride the
+# cfg, not the tree — DESIGN.md §11), so the checkpoint carries the cfg in
+# its manifest and loading validates structure eagerly instead of
+# shape-failing inside a jitted step.
+# ---------------------------------------------------------------------------
+_KIND_KEYS = {"dense": ("w",), "tt": ("cores",), "int4": ("qweight", "scales")}
+
+
+def validate_compressed_params(cfg: ModelConfig, params) -> None:
+    """Raise ``ValueError`` naming every leaf where ``params`` does not
+    structurally match ``cfg``'s spec tree (wrong kind, missing keys)."""
+    errs: list[str] = []
+
+    def walk(p, s, path):
+        if isinstance(s, LinearSpec):
+            want = set(_KIND_KEYS[s.kind]) | ({"b"} if s.bias else set())
+            have = set(p) if isinstance(p, dict) else set()
+            if want - have:
+                kinds = [k for k, keys in _KIND_KEYS.items()
+                         if set(keys) <= have]
+                got = f"a {kinds[0]!r} subtree" if kinds else f"keys {sorted(have)}"
+                errs.append(f"{path or '<root>'}: expected {s.kind!r} linear "
+                            f"(keys {sorted(want)}), tree has {got}")
+            elif s.kind == "tt" and len(p["cores"]) != s.tt.d:
+                errs.append(f"{path or '<root>'}: {len(p['cores'])} TT cores "
+                            f"vs spec d={s.tt.d}")
+            return
+        if s is None:
+            return
+        if isinstance(s, dict):
+            if not isinstance(p, dict) or set(s) - set(p):
+                errs.append(f"{path or '<root>'}: missing keys "
+                            f"{sorted(set(s) - set(p if isinstance(p, dict) else ())) }")
+                return
+            for k in s:
+                walk(p[k], s[k], f"{path}/{k}" if path else k)
+            return
+        if len(p) != len(s):
+            errs.append(f"{path or '<root>'}: {len(p)} param entries vs "
+                        f"{len(s)} spec entries")
+            return
+        for i, (pp, ss) in enumerate(zip(p, s)):
+            walk(pp, ss, f"{path}[{i}]")
+
+    walk(params, _specs_tree(cfg), "")
+    if errs:
+        raise ValueError(
+            f"param tree does not match config {cfg.name!r} "
+            f"(ttd={'on' if cfg.ttd.enabled else 'off'}, "
+            f"quant={'on' if cfg.quant.enabled else 'off'}, "
+            f"tt_embed={'on' if cfg.ttd.embed else 'off'}) — was it "
+            "compressed for a different spec?\n  " + "\n  ".join(errs))
+
+
+def save_compressed(ckpt_dir, params, cfg: ModelConfig, *, step: int = 0):
+    """Checkpoint a compressed tree together with the cfg it serves under."""
+    from ..checkpoint.store import save_checkpoint
+    from ..config import config_to_dict
+    validate_compressed_params(cfg, params)
+    return save_checkpoint(ckpt_dir, step, params,
+                           extra={"model_config": config_to_dict(cfg)})
+
+
+def load_compressed(ckpt_dir, step: int | None = None):
+    """Load ``(params, cfg)`` saved by :func:`save_compressed`.
+
+    The target structure is rebuilt from the cfg in the manifest (no dense
+    re-validation), then checked against the spec tree so a mismatched
+    checkpoint fails here with leaf paths, not inside a jitted step.
+    """
+    import json
+    from pathlib import Path
+
+    from ..checkpoint.store import latest_step, restore_checkpoint
+    from ..config import config_from_dict
+    from ..models import build_model
+
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    manifest = json.loads(
+        (Path(ckpt_dir) / f"step_{step:08d}" / "manifest.json").read_text())
+    extra = manifest["extra"]
+    if "model_config" not in extra:
+        raise ValueError(
+            f"checkpoint {ckpt_dir} step {step} carries no model_config — "
+            "re-save via core.compress.save_compressed so the target cfg "
+            "round-trips with the tree")
+    cfg = config_from_dict(extra["model_config"])
+    model = build_model(cfg)
+    target = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    params, _ = restore_checkpoint(ckpt_dir, step, target)
+    mismatch = [
+        f"{name}: saved {tuple(np.asarray(got).shape)} vs spec {tuple(want.shape)}"
+        for (name, got), (_, want) in zip(
+            _flatten_named(params), _flatten_named(target))
+        if tuple(np.asarray(got).shape) != tuple(want.shape)]
+    if mismatch:
+        raise ValueError(
+            f"checkpoint {ckpt_dir} step {step} does not match its own "
+            f"manifest cfg {cfg.name!r}:\n  " + "\n  ".join(mismatch[:8]))
+    validate_compressed_params(cfg, params)
+    return params, cfg
+
+
+def _flatten_named(tree):
+    from ..checkpoint.store import _flatten_with_paths
+    return _flatten_with_paths(tree)

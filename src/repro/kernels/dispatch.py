@@ -49,6 +49,7 @@ from .paged_attention import paged_attention_pallas
 from .prefill_attention import prefill_attention_pallas
 from .scan_rglru import rglru_scan_pallas
 from .scan_wkv import wkv_scan_pallas
+from .tt_embed import tt_embed_pallas
 from .tt_linear import tt_linear_pallas
 
 BACKENDS = ("ref", "pallas-interpret", "pallas")
@@ -204,6 +205,30 @@ def tt_linear(x, cores, spec: TTSpec, *, scale=None, bias=None, residual=None,
                              interpret=(backend == "pallas-interpret"))
         y = y.reshape(*lead, spec.n_out)
     return _record_dispatch(role or "tt", backend, y, t0)
+
+
+def tt_embed(ids, cores, spec: TTSpec, *, backend: str | None = None,
+             role: str = "embed_lookup"):
+    """Row gather of a TT-compressed embedding table (TensorGPT layout).
+
+    ids: int32 of any shape (padding ids resolve like the dense
+    ``jnp.take`` path: negative wrap once, then clamp into range);
+    returns (…, D) f32 rows of the (V, D) table
+    the cores describe — ``spec`` has M = V, N = D.  ``ref`` runs the
+    digit-indexed chain in ``kernels/ref.py``; the Pallas backends the
+    one-hot-gather tile kernel (``kernels/tt_embed.py``).
+    """
+    backend = resolve_backend(backend, role=role)
+    t0 = _timing_t0(ids)
+    if backend == "ref":
+        y = ref.tt_embedding(ids, cores, spec)
+    else:
+        lead = ids.shape
+        flat = jnp.asarray(ids, jnp.int32).reshape(-1)
+        y = tt_embed_pallas(flat, cores, spec,
+                            interpret=(backend == "pallas-interpret"))
+        y = y.reshape(*lead, spec.n_in)
+    return _record_dispatch(role, backend, y, t0)
 
 
 def paged_attention(q, cache, block_tables, qpos, *, sm_scale=None,

@@ -48,6 +48,40 @@ def tt_linear_bn_res(x, cores, spec, scale=None, bias=None, residual=None,
     return y.astype(x.dtype)
 
 
+def tt_embedding(ids: jax.Array, cores: list[jax.Array], spec: TTSpec) -> jax.Array:
+    """Gathered-row TT embedding oracle (TensorGPT-style vocab-axis TT).
+
+    The (V, D) table is the TT's (M, N) weight with M = V: row ``i`` of the
+    table is row ``i`` of W, so a gather never reconstructs the table —
+    each token id is split into its big-endian ``out_modes`` digits
+    ``(i_1..i_d)``, digit ``i_k`` selects the ``(r0, n_k, r1)`` slice of
+    core matrix ``C_k`` (columns are m-major), and the per-token slices are
+    chained left-to-right exactly like ``tt_linear``'s stage contraction.
+    ids: int32 of any shape; padding ids follow the dense path's
+    ``jnp.take`` semantics — negative ids wrap once (``-1`` is row
+    ``V - 1``), anything else clamps into range.  Returns (..., D) f32 rows.
+    """
+    lead = ids.shape
+    flat = jnp.asarray(ids, jnp.int32).reshape(-1)
+    flat = jnp.clip(jnp.where(flat < 0, flat + spec.n_out, flat),
+                    0, spec.n_out - 1)
+    t = flat.shape[0]
+    m = spec.out_modes
+    p = None
+    for k in range(spec.d):
+        stride = math.prod(m[k + 1:])
+        digit = (flat // stride) % m[k]
+        r0, r1 = spec.ranks[k], spec.ranks[k + 1]
+        n_k = spec.in_modes[k]
+        c = jnp.asarray(cores[k], jnp.float32).reshape(r0, n_k, m[k], r1)
+        sel = jnp.moveaxis(jnp.take(c, digit, axis=2), 2, 0)  # (T, r0, n_k, r1)
+        if p is None:
+            p = sel.reshape(t, n_k, r1)  # r0 == 1 on the first core
+        else:
+            p = jnp.einsum("txr,trjs->txjs", p, sel).reshape(t, -1, r1)
+    return p.reshape(*lead, spec.n_in)
+
+
 NEG_INF = -1e30
 
 

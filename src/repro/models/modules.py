@@ -478,13 +478,47 @@ def apply_mlp(params, x, specs: dict[str, LinearSpec], cfg: ModelConfig, compute
 # masked formulation below into local-gather + AllReduce instead of
 # all-gathering the table (important for 163k×7168 tables).
 # ---------------------------------------------------------------------------
+def embed_spec(cfg: ModelConfig) -> LinearSpec | None:
+    """TT spec for the embedding table, or ``None`` for the dense gather.
+
+    TensorGPT-style vocab-axis TT: the (V, D) table is the TT's (M, N)
+    weight directly (M = V, N = D), so ``out_modes`` factor the vocab and
+    ``in_modes`` the model dim, and a row gather becomes the digit-indexed
+    core contraction in ``kernels.dispatch.tt_embed``.
+    """
+    ttd = cfg.ttd
+    if not (ttd.enabled and ttd.embed):
+        return None
+    try:
+        tt = TTSpec.make(cfg.d_model, cfg.vocab_size,
+                         ttd.embed_rank or ttd.rank, d=ttd.embed_d or ttd.d)
+    except ValueError:
+        return None  # un-factorizable vocab/width: stay dense
+    return LinearSpec("tt", cfg.d_model, cfg.vocab_size, tt=tt,
+                      role="embed_lookup", backend=cfg.kernel_backend)
+
+
 def init_embed(key, cfg: ModelConfig, param_dtype):
+    sp = embed_spec(cfg)
+    if sp is not None:
+        return init_tt_linear(key, sp.tt, dtype=param_dtype)
     std = 1.0 / math.sqrt(cfg.d_model)
     p = {"table": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32) * std).astype(param_dtype)}
     return p
 
 
-def embed_lookup(params, ids, compute_dtype):
+def embed_lookup(params, ids, compute_dtype, cfg: ModelConfig | None = None):
+    if "cores" in params:
+        sp = embed_spec(cfg) if cfg is not None else None
+        if sp is None:
+            raise ValueError(
+                "params carry a TT-compressed embedding but the config does "
+                "not declare one (cfg.ttd.embed) — pass the cfg the tree was "
+                "compressed for")
+        backend = dispatch.resolve_backend(None, role=sp.role,
+                                           preferred=sp.backend)
+        rows = dispatch.tt_embed(ids, params["cores"], sp.tt, backend=backend)
+        return rows.astype(compute_dtype)
     table = params["table"]
     out = jnp.take(table, ids, axis=0).astype(compute_dtype)
     return out

@@ -32,6 +32,7 @@ from .modules import (
     attention_dense,
     dt,
     embed_lookup,
+    embed_spec,
     flash_attention,
     init_embed,
     init_linear,
@@ -264,7 +265,7 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
     """tokens: (B, S) int32 -> logits (B, S, V) f32, aux scalar."""
     compute_dtype = dt(cfg.compute_dtype)
     b, s = tokens.shape[:2]
-    x = inputs_embeds if inputs_embeds is not None else embed_lookup(params["embed"], tokens, compute_dtype)
+    x = inputs_embeds if inputs_embeds is not None else embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, "model", None)
     rope_cs = _rope_tables(cfg, positions, b, s)
     aux_total = jnp.zeros((), jnp.float32)
@@ -284,6 +285,17 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, *, remat="none",
 
 def logits_from_hidden(params, cfg: ModelConfig, x, compute_dtype=None):
     compute_dtype = compute_dtype or dt(cfg.compute_dtype)
+    if cfg.tie_embeddings and "cores" in params["embed"]:
+        # tied TT embedding: the unembed IS the TT linear — the cores'
+        # (M, N) = (V, D) weight maps (…, D) -> (…, V) directly
+        sp = embed_spec(cfg)
+        if sp is None:
+            raise ValueError(
+                "embed params carry TT cores but cfg.ttd.embed is off")
+        backend = dispatch.resolve_backend(None, role="unembed",
+                                           preferred=sp.backend)
+        return dispatch.tt_linear(x.astype(jnp.float32), params["embed"]["cores"],
+                                  sp.tt, backend=backend, role="unembed")
     table = params["embed"]["table"] if cfg.tie_embeddings else params["head"]["w"].T
     return unembed(x, table, compute_dtype)
 
@@ -291,6 +303,12 @@ def logits_from_hidden(params, cfg: ModelConfig, x, compute_dtype=None):
 def head_weight(params, cfg: ModelConfig):
     """(D, V) unembedding weight (tied or separate)."""
     if cfg.tie_embeddings:
+        if "cores" in params["embed"]:
+            raise ValueError(
+                "tied TT-compressed embedding has no dense head weight — "
+                "logits go through logits_from_hidden's TT unembed path; "
+                "reconstruct via core.ttd.tt_reconstruct if a dense (D, V) "
+                "matrix is genuinely needed")
         return params["embed"]["table"].T
     return params["head"]["w"]
 
@@ -312,7 +330,7 @@ def decode_step(params, cfg: ModelConfig, caches, tokens, pos, positions=None):
     Returns logits (B, V) f32 and updated caches."""
     compute_dtype = dt(cfg.compute_dtype)
     b = tokens.shape[0]
-    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, None, None)
     if positions is None:
         rope_pos = jnp.broadcast_to(pos[None], (1,)).astype(jnp.int32)
@@ -342,7 +360,7 @@ def prefill(params, cfg: ModelConfig, tokens, positions=None, cache_dtype=jnp.bf
     compute_dtype = dt(cfg.compute_dtype)
     b, s = tokens.shape
     max_len = max_len or s
-    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, "model", None)
     rope_cs = _rope_tables(cfg, positions, b, s)
     caches = []
@@ -476,7 +494,7 @@ def decode_step_paged(params, cfg: ModelConfig, caches, tokens, block_tables,
     updated caches.
     """
     compute_dtype = dt(cfg.compute_dtype)
-    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, None, None)
     pos2 = positions[:, None].astype(jnp.int32)
     rope_cs = _paged_rope(cfg, pos2)
@@ -496,7 +514,7 @@ def prefill_paged_chunk(params, cfg: ModelConfig, caches, tokens, block_tables,
     driver picks each sequence's last-real-token row — and updated caches.
     """
     compute_dtype = dt(cfg.compute_dtype)
-    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, "model", None)
     rope_cs = _paged_rope(cfg, positions.astype(jnp.int32))
     x, new_caches = _paged_stack(params, cfg, caches, x, rope_cs, block_tables,
@@ -602,7 +620,7 @@ def prefill_ring_chunk(params, cfg: ModelConfig, caches, tokens, positions):
     logits (B, C, V) f32 for every chunk position and the updated caches.
     """
     compute_dtype = dt(cfg.compute_dtype)
-    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, "model", None)
     rope_cs = _paged_rope(cfg, positions.astype(jnp.int32))
     x, new_caches = _ring_stack(params, cfg, caches, x, rope_cs,
@@ -617,7 +635,7 @@ def decode_step_ring(params, cfg: ModelConfig, caches, tokens, positions):
     (``-1`` = inactive row).  Returns logits (B, V) f32 and updated caches.
     """
     compute_dtype = dt(cfg.compute_dtype)
-    x = embed_lookup(params["embed"], tokens, compute_dtype)
+    x = embed_lookup(params["embed"], tokens, compute_dtype, cfg)
     x = constrain(x, BATCH, None, None)
     pos2 = positions[:, None].astype(jnp.int32)
     rope_cs = _paged_rope(cfg, pos2)
@@ -640,7 +658,7 @@ def specs_tree(cfg: ModelConfig):
         else:
             seg["mlp"] = sp.mlp_d()
         segs.append(seg)
-    tree = {"embed": None, "segments": segs, "final_norm": None}
+    tree = {"embed": embed_spec(cfg), "segments": segs, "final_norm": None}
     if not cfg.tie_embeddings:
         tree["head"] = None
     return tree

@@ -61,9 +61,15 @@ def session_step_fns(session: InferenceSession, kernel_backend: str | None = Non
     step methods are pure given the static config, so engines over the same
     model share one trace cache regardless of their SessionSpec — geometry
     differences only change argument shapes, which jit re-specializes on
-    naturally.  ``begin`` is ``None`` unless the backend declares
-    ``needs_encoder_ctx``.  The kernel backend resolves at trace time, so
-    the engine's choice (if any) is pinned into all programs.
+    naturally.  Compression rides the config, not the params: two engines
+    serving the same architecture under different compression specs
+    (TT ranks, int4 groups, TT embed) carry different ``ModelConfig``s and
+    therefore get distinct cache entries — TT-core / int4 / embed-core
+    leaves are ordinary traced arguments inside each program
+    (tests/test_compressed_serve.py pins this).  ``begin`` is ``None``
+    unless the backend declares ``needs_encoder_ctx``.  The kernel backend
+    resolves at trace time, so the engine's choice (if any) is pinned into
+    all programs.
     """
     key = (*session.step_key, kernel_backend)
     if key not in _STEP_CACHE:
@@ -129,11 +135,22 @@ def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int,
     return jnp.stack([x if x is not None else zero for x in last]), state
 
 
+_PARAM_LEAF_NAMES = ("w", "table", "cores", "qweight", "scales", "b")
+
+
 def _cache_leaf_rule(path, shape, mesh: Mesh, batch_axes):
     names = []
     for p in path:
         names.append(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))))
     leaf = names[-1]
+    if leaf in _PARAM_LEAF_NAMES or (names and names[-2:-1] == ["cores"]):
+        # the cache walk only knows *state* leaves; a compressed param tree
+        # (TT cores / int4 qweight+scales / embed table) fed here would get
+        # silently replicated — route params through dist.sharding instead
+        raise ValueError(
+            f"cache sharding rule got param leaf {'/'.join(names)!r}; "
+            "session *state* only — shard params via "
+            "repro.dist.sharding.param_shardings")
     nd = len(shape)
     intent = [None] * nd
     if leaf in ("k", "v"):

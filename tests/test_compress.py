@@ -30,6 +30,46 @@ def test_table1_llama2():
     assert abs(crs["gate"] - 1007.89) < 0.01
 
 
+def test_bit_accounting_pins():
+    """Bit-CR accounting (regenerated pins, benchmarks/table1_cr.py):
+    the dense baseline width derives from cfg.param_dtype (float32 Table-I
+    configs -> bits-CR == param-CR when no int4 mixes in); the deployment
+    recipe (int4 non-TT linears vs an FP16 baseline) shifts it."""
+    from benchmarks.table1_cr import DEPLOY_BITS, deploy_bits_cr
+
+    for arch in ("chatglm3-6b", "llama2-7b"):
+        cfg = get_config(arch)
+        rep = compression_report(cfg)  # param_dtype float32 -> 32-bit baseline
+        assert abs(rep.network_cr_bits - rep.network_cr) < 1e-9
+        assert abs(deploy_bits_cr(cfg) - DEPLOY_BITS[arch]) < 0.005, arch
+    # explicit param_bits still overrides the derived default
+    cfg = get_config("chatglm3-6b")
+    assert compression_report(cfg, param_bits=16).network_cr_bits == \
+        compression_report(cfg.replace(param_dtype="bfloat16")).network_cr_bits
+
+
+def test_embed_accounting():
+    """Tied tables count once; TT embed compression moves only the
+    compressed side of network_cr_with_embed (untied head stays dense)."""
+    import dataclasses
+
+    cfg = get_config("tinyllama-1.1b")  # untied
+    rep = compression_report(cfg)
+    assert rep.embed_params == 2 * cfg.vocab_size * cfg.d_model
+    assert rep.embed_params_comp == rep.embed_params  # TT embed off
+    tied = compression_report(cfg.replace(tie_embeddings=True))
+    assert tied.embed_params == cfg.vocab_size * cfg.d_model
+    assert tied.network_cr_with_embed > rep.network_cr_with_embed
+
+    emb = compression_report(cfg.replace(
+        ttd=dataclasses.replace(cfg.ttd, embed=True)))
+    assert emb.embed_params == rep.embed_params  # dense baseline unchanged
+    assert emb.embed_params_comp < rep.embed_params_comp
+    assert emb.embed_params_comp > cfg.vocab_size * cfg.d_model  # dense head rides
+    assert emb.network_cr_with_embed > rep.network_cr_with_embed
+    assert emb.network_cr == rep.network_cr  # blocks-only CR untouched
+
+
 def test_every_arch_has_positive_block_cr():
     for arch in ("tinyllama-1.1b", "qwen1.5-110b", "mixtral-8x22b", "kimi-k2-1t-a32b"):
         rep = compression_report(get_config(arch))

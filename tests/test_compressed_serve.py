@@ -1,0 +1,272 @@
+"""Compression → serving integration (DESIGN.md §11).
+
+``compress_model`` output must flow through ``make_session`` /
+``serve.steps.session_step_fns`` / the engine unchanged: TT-core, int4 and
+TT-embedding leaves are ordinary traced arguments inside the jitted step
+programs, and compression specs ride the *config* (so differently-compressed
+engines get distinct step-cache entries, never a stale program).  The fuzz
+here is the compressed counterpart of tests/test_serve_fuzz.py: seeded
+schedules with preemption, paged + ring backends, ref vs pallas-interpret,
+token-identical to the one-request reference.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QuantConfig, TTDConfig
+from repro.configs import get_config
+from repro.core.compress import compress_model
+from repro.models import build_model
+from repro.serve.engine import Engine
+from repro.serve.kv_cache import blocks_for
+
+MAX_LEN = 96
+_MAX_NEW = 5
+
+_CACHE: dict = {}
+
+
+def _dense_setup(arch="tinyllama-1.1b"):
+    if arch not in _CACHE:
+        cfg = get_config(arch, reduced=True).replace(
+            compute_dtype="float32", param_dtype="float32",
+            ttd=TTDConfig(enabled=False), quant=QuantConfig(enabled=False))
+        model = build_model(cfg)
+        _CACHE[arch] = (cfg, model, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[arch]
+
+
+def _target_cfg(arch="tinyllama-1.1b", *, int4=False, embed=False,
+                kernel_backend=None):
+    cfg = get_config(arch, reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32")
+    if int4:
+        cfg = cfg.replace(quant=QuantConfig(enabled=True, bits=4,
+                                            group_size=32))
+    if embed:
+        cfg = cfg.replace(ttd=dataclasses.replace(cfg.ttd, embed=True))
+    if kernel_backend is not None:
+        cfg = cfg.replace(kernel_backend=kernel_backend)
+    return cfg
+
+
+def _compressed(target):
+    """Compressed params for ``target`` (cached per compression spec —
+    kernel_backend doesn't change the tree)."""
+    key = ("params", target.ttd, target.quant)
+    if key not in _CACHE:
+        dense_cfg, _, dense_params = _dense_setup(target.name)
+        _CACHE[key] = compress_model(dense_params, dense_cfg, target)
+    return _CACHE[key]
+
+
+def _reference(model, params, prompt, max_tokens):
+    """Greedy one-request continuation via model.prefill + decode_step."""
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)},
+        cache_dtype=jnp.float32, max_len=MAX_LEN)
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    for _ in range(max_tokens - 1):
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": jnp.asarray([[out[-1]]], jnp.int32)},
+            jnp.int32(pos))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def _schedule(seed):
+    rng = np.random.default_rng(3000 + seed)
+    reqs = []
+    for _ in range(int(rng.integers(3, 6))):
+        plen = int(rng.integers(1, 11))
+        prompt = [int(t) for t in rng.integers(0, 256, plen)]
+        reqs.append((int(rng.integers(0, 5)), prompt,
+                     int(rng.integers(1, _MAX_NEW + 1))))
+    return sorted(reqs)
+
+
+def _drive(engine, sched):
+    handles, t, pending = [], 0, list(sched)
+    while pending or engine.pending():
+        while pending and pending[0][0] <= t:
+            _, prompt, max_tokens = pending.pop(0)
+            handles.append(engine.submit(prompt, max_tokens=max_tokens))
+        engine.tick()
+        t += 1
+        assert t < 2000, "scheduler stalled"
+    return handles
+
+
+# ---------------------------------------------------------------------------
+# Satellite: step-fn memoization across compression specs
+# ---------------------------------------------------------------------------
+def test_step_cache_distinct_compression_specs():
+    """Serving the same architecture twice under different compression specs
+    must produce two step-cache entries (the spec rides the cfg in the memo
+    key), and each engine's tokens must match its own solo reference."""
+    from repro.serve.steps import session_step_fns
+
+    prompts = [[1, 2, 3], [7, 5], [2, 2, 9, 4]]
+    engines = {}
+    for name, target in (("tt", _target_cfg()),
+                         ("tt_int4", _target_cfg(int4=True))):
+        params = _compressed(target)
+        model = build_model(target)
+        eng = Engine(model, params, slots=2, max_len=MAX_LEN, prefill_chunk=8)
+        for p in prompts:
+            eng.submit(p, max_tokens=4)
+        got = [h.out_tokens for h in eng.run()]
+        want = [_reference(model, params, p, 4) for p in prompts]
+        assert got == want, (name, got, want)
+        engines[name] = eng
+
+    fns_tt = session_step_fns(engines["tt"].session)
+    assert session_step_fns(engines["tt"].session) is fns_tt  # memo hit
+    fns_q = session_step_fns(engines["tt_int4"].session)
+    assert fns_tt is not fns_q  # distinct specs -> distinct programs
+    assert engines["tt"].session.step_key != engines["tt_int4"].session.step_key
+
+
+def test_cache_leaf_rule_rejects_param_leaves():
+    """The cache sharding walk is state-only: a compressed param tree fed to
+    it must fail loudly (params go through dist.sharding), not silently
+    replicate TT cores / int4 scales."""
+    from jax.sharding import Mesh
+
+    from repro.serve.steps import cache_pspecs
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    state_like = {"k": jax.ShapeDtypeStruct((2, 4, 8, 2, 16), jnp.float32)}
+    cache_pspecs(state_like, mesh)  # state names pass
+    for bad in ({"attn": {"wo": {"cores": [jax.ShapeDtypeStruct((8, 16), jnp.float32)]}}},
+                {"wq": {"qweight": jax.ShapeDtypeStruct((64, 32), jnp.int8),
+                        "scales": jax.ShapeDtypeStruct((64, 2), jnp.float32)}},
+                {"embed": {"table": jax.ShapeDtypeStruct((256, 64), jnp.float32)}}):
+        with pytest.raises(ValueError, match="param leaf"):
+            cache_pspecs(bad, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: compressed serve fuzz (token-identity vs one-request reference)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,engine_backend", [
+    (0, "paged"), (1, "ring"), (2, "paged"), (3, "ring"),
+])
+def test_compressed_serve_fuzz(seed, engine_backend):
+    """TT+int4 tinyllama through fuzzed schedules with tight block pools
+    (preemption + recompute re-admission): multi-slot tokens must be
+    identical to the solo reference, and identical between the ref and
+    pallas-interpret kernel backends."""
+    sched = _schedule(seed)
+    got = {}
+    for kb in ("ref", "pallas-interpret"):
+        target = _target_cfg(int4=True, kernel_backend=kb)
+        params = _compressed(target)
+        model = build_model(target)
+        max_seq = max(len(p) for _, p, _ in sched) + _MAX_NEW + 1
+        kw = dict(slots=2, max_len=MAX_LEN, block_size=4,
+                  prefill_batch=2, prefill_chunk=8, backend=engine_backend)
+        if engine_backend == "paged":
+            kw["num_blocks"] = blocks_for(max_seq, 4) + 3  # tight: preempts
+        eng = Engine(model, params, **kw)
+        toks = [h.out_tokens for h in _drive(eng, sched)]
+        want = [_reference(model, params, p, m) for _, p, m in sched]
+        assert toks == want, (kb, toks, want)
+        if eng.manager is not None:
+            assert eng.manager.num_free == eng.manager.num_blocks - 1
+            assert eng.manager.live_tokens() == 0
+        got[kb] = toks
+    assert got["ref"] == got["pallas-interpret"]
+
+
+def test_tt_embed_serve_matches_reference():
+    """TT-embedding compression serves through chunked prefill + ragged
+    decode and stays token-identical to the solo reference."""
+    target = _target_cfg(embed=True)
+    params = _compressed(target)
+    assert "cores" in params["embed"] and "table" not in params["embed"]
+    model = build_model(target)
+    sched = _schedule(7)
+    for backend in ("paged", "ring"):
+        eng = Engine(model, params, slots=2, max_len=MAX_LEN,
+                     prefill_chunk=8, backend=backend)
+        toks = [h.out_tokens for h in _drive(eng, sched)]
+        want = [_reference(model, params, p, m) for _, p, m in sched]
+        assert toks == want, (backend, toks, want)
+
+
+# ---------------------------------------------------------------------------
+# TT-embedding parity: oracle vs Pallas kernel vs dense gather
+# ---------------------------------------------------------------------------
+def test_tt_embedding_parity():
+    from repro.core.ttd import TTSpec, cores_to_matrices, tt_svd
+    from repro.kernels import dispatch, ref
+
+    V, D = 240, 48
+    spec = TTSpec.make(D, V, 10**6, d=3)  # full rank -> exact rows
+    rng = np.random.default_rng(0)
+    table = rng.standard_normal((V, D)).astype(np.float32)
+    cores = [jnp.asarray(m, jnp.float32)
+             for m in cores_to_matrices(tt_svd(table, spec), spec)]
+    # ragged/padded rows: -1 ids must resolve exactly like the dense path's
+    # jnp.take (negative wrap), or padded prefill rows would diverge
+    ids = np.array([[0, 5, V - 1, -1, -1],
+                    [17, -1, 3, 2, 1],
+                    [-1, -1, -1, -1, -1]], np.int32)
+    want = jnp.take(jnp.asarray(table), jnp.asarray(ids), axis=0)
+    got_ref = ref.tt_embedding(jnp.asarray(ids), cores, spec)
+    assert float(jnp.abs(got_ref - want).max()) < 1e-4
+    got_pl = dispatch.tt_embed(jnp.asarray(ids), cores, spec,
+                               backend="pallas-interpret")
+    assert float(jnp.abs(got_pl - got_ref).max()) < 1e-6
+    assert dispatch.resolved_backend("embed_lookup") == "pallas-interpret"
+    # 1-D and scalar-free shapes route through the same path
+    flat = dispatch.tt_embed(jnp.asarray([3, -1, 9], jnp.int32), cores, spec,
+                             backend="ref")
+    assert flat.shape == (3, D)
+
+
+def test_embed_lookup_requires_cfg():
+    from repro.models.modules import embed_lookup
+
+    with pytest.raises(ValueError, match="ttd.embed"):
+        embed_lookup({"cores": []}, jnp.zeros((1,), jnp.int32), jnp.float32)
+
+
+def test_full_rank_tt_embed_forward_exact(key):
+    """Full-rank TT embedding reproduces the dense model's hidden states."""
+    dense_cfg, m_d, params_d = _dense_setup()
+    target = dense_cfg.replace(ttd=TTDConfig(enabled=True, rank=10**6, d=2,
+                                             roles=(), embed=True))
+    params_t = compress_model(params_d, dense_cfg, target, svd_method="svd")
+    m_t = build_model(target)
+    toks = jax.random.randint(key, (2, 12), 0, dense_cfg.vocab_size)
+    h_d, _ = m_d.forward(params_d, {"tokens": toks})
+    h_t, _ = m_t.forward(params_t, {"tokens": toks})
+    assert float(jnp.linalg.norm(h_d - h_t) / jnp.linalg.norm(h_d)) < 1e-4
+
+
+def test_tied_tt_embedding_unembeds_through_cores(key):
+    """Tied configs route logits through the TT unembed (the cores ARE the
+    head); the dense head_weight accessor refuses clearly."""
+    base = get_config("tinyllama-1.1b", reduced=True).replace(
+        compute_dtype="float32", param_dtype="float32", tie_embeddings=True)
+    dense_cfg = base.replace(ttd=TTDConfig(enabled=False),
+                             quant=QuantConfig(enabled=False))
+    target = base.replace(ttd=TTDConfig(enabled=True, rank=10**6, d=2,
+                                        roles=(), embed=True))
+    m_d = build_model(dense_cfg)
+    params_d = m_d.init(key)
+    params_t = compress_model(params_d, dense_cfg, target, svd_method="svd")
+    m_t = build_model(target)
+    toks = jax.random.randint(key, (1, 8), 0, base.vocab_size)
+    l_d, _ = m_d.prefill(params_d, {"tokens": toks}, cache_dtype=jnp.float32)
+    l_t, _ = m_t.prefill(params_t, {"tokens": toks}, cache_dtype=jnp.float32)
+    assert float(jnp.linalg.norm(l_d - l_t) / jnp.linalg.norm(l_d)) < 1e-3
+    with pytest.raises(ValueError, match="no dense head weight"):
+        m_t.head_weight(params_t)
