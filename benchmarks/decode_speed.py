@@ -78,16 +78,11 @@ def _workload(n_requests: int, max_tokens: int):
              max_tokens) for i in range(n_requests)]
 
 
-def _pcts(h):
-    """{p50,p95,p99,mean} row from an obs histogram (None when absent)."""
-    if h is None or h.count == 0:
-        return {"p50": None, "p95": None, "p99": None, "mean": None}
-    return {"p50": h.percentile(0.50), "p95": h.percentile(0.95),
-            "p99": h.percentile(0.99), "mean": h.mean()}
-
-
-def _bench_engine(make_engine, workload):
+def _bench_engine(make_engine, workload, ttft_slo_s):
+    # shared summary schema with BENCH_traffic.json (repro.traffic.report):
+    # percentile rows from the obs registry, goodput from per-request outcomes
     from repro.obs import Observer
+    from repro.traffic import goodput_tok_per_s, outcome_of, registry_summary
 
     # warmup engine runs the *whole workload* untimed so every program shape
     # (chunk grids, ragged decode) compiles before the timed run (step
@@ -107,16 +102,19 @@ def _bench_engine(make_engine, workload):
     assert len(done) == len(workload)
     toks = sum(len(r.out_tokens) for r in done)
     ftl = sum(r.t_first - r.t_submit for r in reqs) / len(reqs)
-    reg = obs.registry
-    assert reg.get("serve_tokens_total").value == toks
-    return {"tokens": toks, "wall_s": wall, "tok_per_s": toks / wall,
-            "mean_first_token_s": ftl,
-            "ttft_s": _pcts(reg.get("serve_ttft_seconds")),
-            "inter_token_s": _pcts(reg.get("serve_inter_token_seconds"))}
+    summary = registry_summary(obs.registry)
+    assert summary["tokens"] == toks
+    outcomes = [outcome_of(r, ttft_slo_s=ttft_slo_s, idx=i)
+                for i, r in enumerate(reqs)]
+    return {"wall_s": wall, "tok_per_s": toks / wall,
+            "goodput_tok_per_s": goodput_tok_per_s(outcomes, wall),
+            "ttft_slo_s": ttft_slo_s,
+            "n_slo_attained": sum(o.slo_attained for o in outcomes),
+            "mean_first_token_s": ftl, **summary}
 
 
 def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
-              max_tokens=8, out_path="BENCH_serve.json"):
+              max_tokens=8, ttft_slo_s=0.5, out_path="BENCH_serve.json"):
     import jax
 
     from repro.kernels import dispatch
@@ -142,7 +140,7 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
                                    backend=backend, block_size=8,
                                    prefill_batch=min(slots, 4),
                                    prefill_chunk=8, obs=obs),
-                workload)
+                workload, ttft_slo_s)
             # the kernel backends the engine's programs *actually* baked in
             # at trace time (kernels.dispatch records it at resolution), not
             # a re-derivation of the policy chain the benchmark hopes matched;
@@ -152,7 +150,8 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
             scan_backend = (dispatch.resolved_backend(scan_role)
                             if scan_role else None)
             p95 = r["ttft_s"]["p95"]
-            report(f"   {label:12s} slots={slots}: {r['tok_per_s']:7.1f} tok/s  "
+            report(f"   {label:12s} slots={slots}: {r['tok_per_s']:7.1f} tok/s "
+                   f"goodput {r['goodput_tok_per_s']:7.1f}  "
                    f"ttft mean {r['mean_first_token_s']*1e3:7.1f}ms "
                    f"p95 {p95*1e3:7.1f}ms  prefill={prefill_backend}"
                    + (f"  scan={scan_backend}" if scan_role else ""))
@@ -161,11 +160,12 @@ def run_serve(report=print, *, slot_counts=(2, 4), n_requests=8,
                          "recurrent_scan_backend": scan_backend, **r})
     rec = {
         "workload": {"n_requests": n_requests, "max_tokens": max_tokens,
-                     "max_len": max_len},
+                     "max_len": max_len, "ttft_slo_s": ttft_slo_s},
         "note": "CPU wall-clock on the reduced configs: compares the "
                 "families' state-backend structure through one scheduler "
                 "(batched chunked prefill + one ragged decode call per "
-                "tick), not TPU kernel performance.",
+                "tick), not TPU kernel performance.  Summary rows share "
+                "the repro.traffic.report schema with BENCH_traffic.json.",
         "rows": rows,
     }
     Path(out_path).write_text(json.dumps(rec, indent=1))
@@ -178,11 +178,13 @@ def main(argv=None):
     ap.add_argument("--serve", action="store_true",
                     help="benchmark the real ring vs paged serving engines")
     ap.add_argument("--slots", type=int, nargs="*", default=None)
+    ap.add_argument("--ttft-slo", type=float, default=0.5,
+                    help="TTFT SLO (seconds) used for the goodput column")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
     if args.serve:
         run_serve(slot_counts=tuple(args.slots or (2, 4)),
-                  out_path=args.out)
+                  ttft_slo_s=args.ttft_slo, out_path=args.out)
     else:
         run()
 

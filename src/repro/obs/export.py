@@ -67,7 +67,7 @@ _FIELD_TYPES = {
     "max_tokens": int, "n_tokens": int, "chunk": int, "n_chunks": int,
     "rids": list, "ttft_s": (int, float), "active": int, "reason": str,
     "n_out": int, "utilization": (int, float), "free_blocks": int,
-    "live_tokens": int, "active_slots": int,
+    "live_tokens": int, "active_slots": int, "deadline_s": (int, float),
 }
 EVENT_SCHEMA = {
     ev: {**_COMMON, **{f: _FIELD_TYPES[f] for f in fields}}

@@ -2,7 +2,8 @@
 
 The serving engine narrates its scheduling decisions as a flat stream of
 dict events — one per admit / prefill chunk / decode tick / preemption /
-finish / pool sample — each stamped with a **monotonic** timestamp
+cancel / deadline miss / finish / pool sample — each stamped with a
+**monotonic** timestamp
 (``time.perf_counter``; wall-clock never enters duration math, DESIGN.md §9)
 and a process-wide sequence number.  The stream is the ground truth the
 ordering-invariant tests replay (submit ≤ admit ≤ first token ≤ finish;
@@ -30,6 +31,8 @@ EVENT_FIELDS: dict[str, tuple[str, ...]] = {
     "first_token": ("rid", "tick", "ttft_s"),
     "decode_tick": ("tick", "active"),
     "preempt": ("rid", "slot", "tick"),
+    "cancel": ("rid", "slot", "tick", "reason"),
+    "deadline_miss": ("rid", "tick", "deadline_s"),
     "finish": ("rid", "tick", "reason", "n_out"),
     "pool_sample": ("tick", "utilization", "free_blocks", "live_tokens",
                     "active_slots"),

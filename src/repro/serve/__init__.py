@@ -1,2 +1,10 @@
-from .engine import Engine, PagedEngine, Request  # noqa: F401
+from .engine import (  # noqa: F401
+    AdmissionPolicy,
+    EDFAdmission,
+    Engine,
+    FCFSAdmission,
+    PagedEngine,
+    Request,
+)
+from .frontend import AsyncEngine, RequestHandle  # noqa: F401
 from .steps import cache_pspecs, serve_config_of, session_step_fns  # noqa: F401

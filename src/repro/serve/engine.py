@@ -23,6 +23,16 @@ emitted tokens are kept and re-prefilled with the prompt on re-admission, so
 greedy outputs are unchanged).  Constant-state backends never preempt —
 their capacity is the slot itself.
 
+Requests can be **cancelled** mid-flight (``Engine.cancel`` — queued or
+active; an active occupant releases its slot and blocks through the same
+machinery as a preemption, keeping the tokens already emitted) and carry an
+optional **deadline** (``submit(deadline_s=)``; ``tick`` cancels expired
+requests with a ``deadline_miss`` trace event before admitting).  Admission
+order is a pluggable :class:`AdmissionPolicy` (FCFS default, EDF available);
+the decode tick itself is decomposed into schedule → dispatch → collect so
+the asyncio front-end (``serve.frontend``, DESIGN.md §12) can overlap host
+scheduling with device compute via dispatch-ahead double buffering.
+
 First-token latency (``Request.t_first``) is stamped only after
 ``jax.block_until_ready`` on the prefill logits — timing the dispatch
 instead of the computation understates TTFT by the entire prefill on an
@@ -71,14 +81,72 @@ class Request:
     max_tokens: int
     eos: int | None = None
     enc_frames: Any = None  # (T_enc, D) encoder frames (enc-dec families)
+    deadline_s: float | None = None  # completion budget from submit (seconds)
     out_tokens: list[int] = field(default_factory=list)
     done: bool = False
+    cancelled: bool = False
+    finish_reason: str = ""  # eos | max_tokens | max_len | user | deadline
     # monotonic (perf_counter) stamps — duration math only ever uses these
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
     # informational wall-clock submit time (never used in arithmetic)
     t_submit_wall: float = 0.0
+
+
+@dataclass
+class TickPlan:
+    """One decode tick's host-side schedule, frozen at dispatch time.
+
+    ``active``/``rids`` pin which request occupied each scheduled slot when
+    the tick launched — collection skips a slot whose occupant changed while
+    the tick was in flight (a cancellation between dispatch and collect).
+    ``toks`` is the host token batch, or ``None`` when the dispatcher is
+    handed a device-resident token array instead (the dispatch-ahead path:
+    the previous tick's on-device argmax feeds the next tick without a
+    host round-trip).
+    """
+
+    active: list[int]            # scheduled slot ids
+    rids: list[int]              # per-active-slot request id (staleness check)
+    positions: np.ndarray        # (slots,) int32; -1 = idle row
+    toks: np.ndarray | None      # (slots, 1) int32 host tokens, or None
+
+
+class AdmissionPolicy:
+    """Orders the waiting queue for admission (the policy seam, DESIGN §12).
+
+    ``order`` returns the waiting requests in admission-priority order; the
+    engine walks that order and stops at the first request that does not fit
+    (head-of-line semantics *within the policy's order*, so a policy
+    reorders priorities but cannot starve the pool-capacity invariants).
+    """
+
+    name = "policy"
+
+    def order(self, queue: list[Request], now: float) -> list[Request]:
+        raise NotImplementedError
+
+
+class FCFSAdmission(AdmissionPolicy):
+    """First-come-first-served: the queue order is the admission order."""
+
+    name = "fcfs"
+
+    def order(self, queue: list[Request], now: float) -> list[Request]:
+        return queue
+
+
+class EDFAdmission(AdmissionPolicy):
+    """Earliest-deadline-first: requests with the nearest absolute deadline
+    admit first; deadline-free requests follow in FCFS order."""
+
+    name = "edf"
+
+    def order(self, queue: list[Request], now: float) -> list[Request]:
+        return sorted(queue, key=lambda r: (
+            (0, r.t_submit + r.deadline_s) if r.deadline_s is not None
+            else (1, r.t_submit)))
 
 
 class Engine:
@@ -98,7 +166,8 @@ class Engine:
                  cache_dtype=None, prefill_batch: int = 2,
                  prefill_chunk: int | None = None, greedy: bool = True,
                  temperature: float = 1.0, top_k: int = 0, seed: int = 0,
-                 kernel_backend: str | None = None, obs=None):
+                 kernel_backend: str | None = None, obs=None,
+                 admission: AdmissionPolicy | None = None):
         geometry = dict(slots=slots, max_len=max_len, block_size=block_size,
                         num_blocks=num_blocks, cache_dtype=cache_dtype,
                         prefill_chunk=prefill_chunk, backend=backend)
@@ -142,6 +211,8 @@ class Engine:
         self._batch_axis = self._find_batch_axes()
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.admission = admission if admission is not None else FCFSAdmission()
+        self._any_deadline = False  # cheap guard for the per-tick expiry scan
         self._next_rid = 0
         self.slot_req: list[Request | None] = [None] * self.slots
         self.slot_pos = np.zeros(self.slots, np.int32)  # next position to decode
@@ -161,6 +232,8 @@ class Engine:
             self._c_tokens = reg.counter("serve_tokens_total")
             self._c_ticks = reg.counter("serve_decode_ticks_total")
             self._c_preempt = reg.counter("serve_preemptions_total")
+            self._c_cancel = reg.counter("serve_cancellations_total")
+            self._c_deadline = reg.counter("serve_deadline_miss_total")
             self._g_active = reg.gauge("serve_active_slots")
             if self.manager is not None:
                 self._g_util = reg.gauge("serve_pool_utilization")
@@ -169,11 +242,17 @@ class Engine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: list[int], max_tokens: int = 32,
-               eos: int | None = None, enc_frames=None) -> Request:
+               eos: int | None = None, enc_frames=None,
+               deadline_s: float | None = None) -> Request:
         if not prompt:
             raise ValueError("empty prompt")
         if max_tokens < 1:
             raise ValueError("max_tokens must be >= 1")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be a positive completion budget in seconds "
+                f"(got {deadline_s!r} with max_tokens={max_tokens}); omit it "
+                "for no deadline")
         if len(prompt) + 1 > self.max_len:
             raise ValueError(f"prompt needs {len(prompt) + 1} positions "
                              f"> max_len {self.max_len}")
@@ -188,9 +267,10 @@ class Engine:
                     f"request needs up to {need} blocks but the pool only "
                     f"has {self.manager.num_blocks - 1}")
         req = Request(self._next_rid, list(prompt), max_tokens, eos,
-                      enc_frames=enc_frames, t_submit=time.perf_counter(),
-                      t_submit_wall=time.time())
+                      enc_frames=enc_frames, deadline_s=deadline_s,
+                      t_submit=time.perf_counter(), t_submit_wall=time.time())
         self._next_rid += 1
+        self._any_deadline |= deadline_s is not None
         self.queue.append(req)
         if self.obs is not None:
             self.obs.event("submit", t=req.t_submit, rid=req.rid,
@@ -201,13 +281,91 @@ class Engine:
         return bool(self.queue) or any(r is not None for r in self.slot_req)
 
     def tick(self) -> None:
-        """One scheduler step: admit waiting requests (batched chunked
-        prefill), then decode one token for every active sequence."""
+        """One scheduler step: expire deadlines, admit waiting requests
+        (batched chunked prefill), then decode one token for every active
+        sequence.  Decoding is schedule → dispatch → collect so an async
+        front-end can interleave host work between dispatch and collect
+        (dispatch-ahead double buffering, DESIGN.md §12)."""
+        self._expire_deadlines()
         self._admit()
-        self._decode_tick()
+        plan = self._decode_schedule()
+        if plan is not None:
+            logits = self._decode_dispatch(plan)
+            self._decode_collect(plan, logits)
+        self._finish_tick()
+
+    def _finish_tick(self) -> None:
+        """Per-tick epilogue shared by ``tick`` and the async pump."""
         if self.obs is not None:
             self._sample_pool()
         self._tick_no += 1
+
+    def cancel(self, req: Request, reason: str = "user") -> bool:
+        """Cancel a queued or mid-flight request, freeing its slot/blocks.
+
+        Emitted tokens are kept on the request; an active occupant goes
+        through the same slot/block release as a preemption, so the freed
+        capacity admits the next waiting request on the following tick.
+        Returns ``False`` when the request already finished (cancellation
+        raced completion) — callers treat that as a no-op."""
+        if req.done:
+            return False
+        slot = -1
+        if not self._remove_from_queue(req):
+            for s, r in enumerate(self.slot_req):
+                if r is req:
+                    slot = s
+                    self.slot_req[s] = None
+                    self._admit_order.remove(s)
+                    self._t_last_tok.pop(s, None)
+                    if self.manager is not None:
+                        self.manager.free(req.rid)
+                    break
+            else:
+                return False  # not queued, not active: nothing to cancel
+        req.cancelled = True
+        req.done = True
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        self.finished.append(req)
+        if self.obs is not None:
+            self._c_cancel.inc()
+            self.obs.event("cancel", t=req.t_done, rid=req.rid, slot=slot,
+                           tick=self._tick_no, reason=reason)
+        return True
+
+    def _remove_from_queue(self, req: Request) -> bool:
+        # identity-based: dataclass __eq__ would compare enc_frames arrays
+        for i, r in enumerate(self.queue):
+            if r is req:
+                del self.queue[i]
+                return True
+        return False
+
+    def _expired_requests(self, now: float) -> list[Request]:
+        live = self.queue + [r for r in self.slot_req if r is not None]
+        return [r for r in live if r.deadline_s is not None
+                and now - r.t_submit > r.deadline_s]
+
+    def _deadline_due(self) -> bool:
+        """True when some live request's deadline has already passed (the
+        async pump breaks its dispatch-ahead chain to expire it)."""
+        return self._any_deadline and \
+            bool(self._expired_requests(time.perf_counter()))
+
+    def _expire_deadlines(self) -> int:
+        """Cancel every live request whose completion deadline has passed."""
+        if not self._any_deadline:
+            return 0
+        now = time.perf_counter()
+        expired = self._expired_requests(now)
+        for req in expired:
+            if self.obs is not None:
+                self._c_deadline.inc()
+                self.obs.event("deadline_miss", t=now, rid=req.rid,
+                               tick=self._tick_no, deadline_s=req.deadline_s)
+            self.cancel(req, reason="deadline")
+        return len(expired)
 
     def _sample_pool(self) -> None:
         """Record pool-utilization gauges + a pool_sample event (obs on)."""
@@ -227,11 +385,17 @@ class Engine:
                        free_blocks=free, live_tokens=live, active_slots=active)
 
     def run(self, max_ticks: int = 10_000) -> list[Request]:
+        """Tick until drained; returns the requests finished by *this* call.
+
+        The engine stays usable after draining: a later ``submit`` + ``run``
+        serves normally, and the return value never replays earlier runs'
+        requests (``self.finished`` keeps the cumulative history)."""
+        start = len(self.finished)
         ticks = 0
         while self.pending() and ticks < max_ticks:
             self.tick()
             ticks += 1
-        return self.finished
+        return self.finished[start:]
 
     @property
     def num_free_blocks(self) -> int | None:
@@ -265,6 +429,7 @@ class Engine:
 
     def _finish(self, req: Request, reason: str) -> None:
         req.done = True
+        req.finish_reason = reason
         req.t_done = time.perf_counter()
         self.finished.append(req)
         if self.obs is not None:
@@ -324,28 +489,32 @@ class Engine:
 
     # -- admission ------------------------------------------------------------
     def _admit(self):
-        """FCFS admission: take waiting requests while a slot is free and —
-        for block backends — the pool covers their prompt plus one lookahead
-        token, then prefill them together in fixed-width chunks."""
+        """Policy-ordered admission (FCFS by default): take waiting requests
+        while a slot is free and — for block backends — the pool covers their
+        prompt plus one lookahead token, then prefill them together in
+        fixed-width chunks."""
         free_slots = [s for s in range(self.slots) if self.slot_req[s] is None]
         batch: list[tuple[int, Request]] = []
         reserve = 0  # lookahead blocks promised to earlier batch members
-        while self.queue and free_slots and len(batch) < self.prefill_batch:
-            req = self.queue[0]
-            n_tok = len(self._seq_tokens(req))
-            if self.manager is not None:
-                # admission wants the prompt *plus one lookahead token* free
-                # — counting lookahead already reserved by this batch's
-                # earlier members — so a fresh admission doesn't immediately
-                # preempt on its first decode tick
-                bs = self.manager.block_size
-                need = blocks_for(n_tok + 1, bs)
-                if need + reserve > self.manager.num_free or \
-                        not self.manager.allocate(req.rid, n_tok):
-                    break  # head-of-line blocks: keep FCFS order
-                reserve += need - blocks_for(n_tok, bs)
-            self.queue.pop(0)
-            batch.append((free_slots.pop(0), req))
+        if self.queue and free_slots:
+            order = self.admission.order(list(self.queue), time.perf_counter())
+            for req in order:
+                if not free_slots or len(batch) >= self.prefill_batch:
+                    break
+                n_tok = len(self._seq_tokens(req))
+                if self.manager is not None:
+                    # admission wants the prompt *plus one lookahead token*
+                    # free — counting lookahead already reserved by this
+                    # batch's earlier members — so a fresh admission doesn't
+                    # immediately preempt on its first decode tick
+                    bs = self.manager.block_size
+                    need = blocks_for(n_tok + 1, bs)
+                    if need + reserve > self.manager.num_free or \
+                            not self.manager.allocate(req.rid, n_tok):
+                        break  # head-of-line blocks: keep the policy order
+                    reserve += need - blocks_for(n_tok, bs)
+                self._remove_from_queue(req)
+                batch.append((free_slots.pop(0), req))
         if not batch:
             return
         if self.obs is not None:
@@ -425,7 +594,10 @@ class Engine:
             return s
         return None
 
-    def _decode_tick(self):
+    def _decode_schedule(self) -> TickPlan | None:
+        """Host-side tick planning: grow block tables (preempting on
+        exhaustion), pick the active slots, and build the token/position
+        batch.  Returns ``None`` when nothing is active."""
         # block backends: grow each active sequence's table to cover the
         # incoming token, preempting the newest-admitted sequence on block
         # exhaustion (the grower itself, if it is the newest — FCFS favors
@@ -445,7 +617,7 @@ class Engine:
                             f"cannot grow to {int(self.slot_pos[s]) + 1} tokens")
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
-            return
+            return None
         if self.obs is not None:
             self._c_ticks.inc()
             self.obs.event("decode_tick", tick=self._tick_no,
@@ -455,15 +627,76 @@ class Engine:
         for s in active:
             toks[s, 0] = self.slot_req[s].out_tokens[-1]
             positions[s] = self.slot_pos[s]
+        return TickPlan(active=active,
+                        rids=[self.slot_req[s].rid for s in active],
+                        positions=positions, toks=toks)
+
+    def _plan_ahead(self, plan: TickPlan) -> TickPlan | None:
+        """Plan the tick *after* an in-flight ``plan`` without its token
+        values (dispatch-ahead, DESIGN.md §12).
+
+        Safe only when every in-flight slot is guaranteed to survive its
+        emission — greedy sampling (tokens can come from a device-side
+        argmax), no eos watch, not at the max_tokens/max_len frontier — and
+        the pool can grow one more token per sequence without preempting.
+        Returns ``None`` otherwise; the caller falls back to collecting the
+        in-flight tick first."""
+        if not self.greedy:
+            return None  # host-side RNG sampling needs the logits on host
+        for i, s in enumerate(plan.active):
+            req = self.slot_req[s]
+            if req is None or req.rid != plan.rids[i] or req.eos is not None:
+                return None
+            # after the in-flight emission the request must still be live:
+            # not its last max_tokens emission, not at the max_len frontier
+            if len(req.out_tokens) + 1 >= req.max_tokens:
+                return None
+            if int(plan.positions[s]) + 1 >= self.max_len - 1:
+                return None
+        if self.manager is not None:
+            for s in plan.active:
+                # position p+1 writes token p+1 -> needs p+2 covered; bail to
+                # the synchronous path rather than preempt around an
+                # uncollected tick
+                if not self.manager.ensure(self.slot_req[s].rid,
+                                           int(plan.positions[s]) + 2):
+                    return None
+        positions = np.full((self.slots,), -1, np.int32)
+        for s in plan.active:
+            positions[s] = plan.positions[s] + 1
+        if self.obs is not None:
+            self._c_ticks.inc()
+            # the in-flight tick has not collected yet, so _tick_no still
+            # names it; the ahead tick is the next one
+            self.obs.event("decode_tick", tick=self._tick_no + 1,
+                           active=len(plan.active))
+        return TickPlan(active=list(plan.active), rids=list(plan.rids),
+                        positions=positions, toks=None)
+
+    def _decode_dispatch(self, plan: TickPlan, device_toks=None):
+        """Launch the jitted decode step for ``plan`` (async under jax);
+        ``device_toks`` (a (slots, 1) int32 device array) substitutes for the
+        host token batch on the dispatch-ahead path."""
         self._sync_tables()
+        toks = device_toks if device_toks is not None else jnp.asarray(plan.toks)
         with (self.obs.annotate("repro/serve/decode")
               if self.obs is not None else _NULL_CTX):
-            logits, self.state = self._decode(self.params, self.state,
-                                              jnp.asarray(toks),
-                                              jnp.asarray(positions))
-        for s in active:
+            logits, self.state = self._decode(self.params, self.state, toks,
+                                              jnp.asarray(plan.positions))
+        return logits
+
+    def _decode_collect(self, plan: TickPlan, logits, toks_host=None):
+        """Sample/record one token per scheduled slot and run the finish
+        bookkeeping.  ``toks_host`` (a (slots,) int sequence) skips sampling
+        — the dispatch-ahead path already pulled the device argmax.  Slots
+        whose occupant changed since dispatch (cancelled mid-flight) are
+        skipped; their computed token is discarded."""
+        for i, s in enumerate(plan.active):
             req = self.slot_req[s]
-            tok = self._sample(logits[s])
+            if req is None or req.rid != plan.rids[i]:
+                continue  # cancelled while the tick was in flight
+            tok = (int(toks_host[s]) if toks_host is not None
+                   else self._sample(logits[s]))
             self.slot_pos[s] += 1
             if self.obs is not None:
                 # tick-granular inter-token latency: the argmax/device_get in

@@ -93,6 +93,22 @@ def session_step_fns(session: InferenceSession, kernel_backend: str | None = Non
     return _STEP_CACHE[key]
 
 
+@jax.jit
+def _greedy_tokens(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+def greedy_tokens(logits):
+    """Device-side greedy sampling for the dispatch-ahead path.
+
+    (slots, V) logits -> (slots, 1) int32 token column, bitwise the per-row
+    ``argmax`` the synchronous engine samples on host — the async front-end
+    feeds it straight into the next tick's dispatch and pulls it to host
+    while that tick computes (DESIGN.md §12).
+    """
+    return _greedy_tokens(logits)
+
+
 def chunked_prefill(prefill_chunk_fn, params, state, prompts, *, chunk: int,
                     on_chunk=None):
     """Prefill several prompts through repeated fixed-width chunk calls.

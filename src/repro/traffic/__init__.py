@@ -1,0 +1,27 @@
+"""repro.traffic — reproducible serving traffic: workloads, replay, reports.
+
+Three layers (DESIGN.md §12):
+
+* :mod:`~repro.traffic.workload` — declarative :class:`WorkloadSpec`
+  (seeded Poisson/bursty arrivals, bucket-mixture lengths, SLOs, deadlines,
+  client cancellations) expanded deterministically by :func:`make_workload`.
+* :mod:`~repro.traffic.runner` — :func:`play`/:func:`drive` replay a
+  schedule open-loop against the asyncio front-end
+  (:class:`~repro.serve.frontend.AsyncEngine`), with ``time_scale``
+  stretching the whole clock for slow CI backends.
+* :mod:`~repro.traffic.report` — shared summary schema: obs-registry
+  percentile rows, per-request outcomes, goodput (SLO-attained tok/s), and
+  the ``BENCH_traffic.json`` schema checker.  ``benchmarks/decode_speed.py
+  --serve`` reports through the same helpers so the BENCH files agree.
+"""
+from .report import (  # noqa: F401
+    RequestOutcome,
+    check_traffic_schema,
+    goodput_tok_per_s,
+    outcome_of,
+    pct_row,
+    registry_summary,
+    traffic_row,
+)
+from .runner import TrafficResult, drive, play  # noqa: F401
+from .workload import TrafficRequest, WorkloadSpec, make_workload  # noqa: F401

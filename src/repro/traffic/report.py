@@ -1,0 +1,152 @@
+"""Traffic accounting: outcomes, goodput, and the shared summary schema.
+
+Pure bookkeeping — no asyncio, no jax.  The runner (and the synchronous
+``benchmarks/decode_speed.py --serve`` path) both report through these
+helpers so ``BENCH_traffic.json`` and ``BENCH_serve.json`` carry **one**
+summary shape:
+
+* :func:`pct_row` — ``{count, mean, p50, p95, p99}`` from an obs histogram
+  (``None``-safe: an absent/empty histogram yields null fields, not a crash).
+* :func:`registry_summary` — the serving metrics every bench row embeds
+  (TTFT / inter-token / queue-time percentiles plus token, tick, preemption,
+  cancellation, and deadline-miss totals), pulled from the engine's
+  :class:`~repro.obs.registry.MetricsRegistry` — the obs layer is the single
+  source of truth for latency percentiles.
+* :class:`RequestOutcome` / :func:`outcome_of` — per-request accounting from
+  the engine's monotonic stamps; ``slo_attained`` means *completed with the
+  first token inside its TTFT SLO*.
+* :func:`goodput_tok_per_s` — SLO-attained tokens per wall second: tokens
+  from requests that missed their SLO (or were cancelled / deadline-expired)
+  spent compute but delivered no client value, so they count in ``tok_per_s``
+  but not in goodput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PCT_FIELDS = ("count", "mean", "p50", "p95", "p99")
+
+
+def pct_row(h) -> dict:
+    """``{count, mean, p50, p95, p99}`` from an obs histogram (None-safe)."""
+    if h is None or h.count == 0:
+        return {"count": 0, "mean": None, "p50": None, "p95": None, "p99": None}
+    return {"count": h.count, "mean": h.mean(), "p50": h.percentile(0.50),
+            "p95": h.percentile(0.95), "p99": h.percentile(0.99)}
+
+
+def registry_summary(reg) -> dict:
+    """The shared serving-metrics block for BENCH rows.
+
+    ``reg`` is a :class:`~repro.obs.registry.MetricsRegistry`; metrics the
+    run never touched report zero / null rather than raising.
+    """
+    def total(name: str) -> int:
+        c = reg.get(name)
+        return int(c.value) if c is not None else 0
+
+    return {
+        "ttft_s": pct_row(reg.get("serve_ttft_seconds")),
+        "inter_token_s": pct_row(reg.get("serve_inter_token_seconds")),
+        "queue_s": pct_row(reg.get("serve_queue_seconds")),
+        "tokens": total("serve_tokens_total"),
+        "decode_ticks": total("serve_decode_ticks_total"),
+        "preempts": total("serve_preemptions_total"),
+        "cancels": total("serve_cancellations_total"),
+        "deadline_misses": total("serve_deadline_miss_total"),
+    }
+
+
+@dataclass
+class RequestOutcome:
+    """Per-request accounting derived from the engine's monotonic stamps."""
+
+    idx: int
+    rid: int
+    n_tokens: int
+    finish_reason: str        # eos | max_tokens | max_len | user | deadline
+    completed: bool           # finished normally (not cancelled/expired)
+    ttft_s: float | None      # first-token latency (None: never got one)
+    latency_s: float | None   # submit -> done
+    slo_attained: bool        # completed and TTFT within its SLO
+
+
+def outcome_of(req, *, ttft_slo_s: float | None = None,
+               idx: int = -1) -> RequestOutcome:
+    """Account one finished engine :class:`~repro.serve.engine.Request`.
+
+    ``ttft_slo_s`` (already time-scaled by the caller when the schedule was)
+    gates ``slo_attained``; ``None`` means every completed request attains.
+    """
+    completed = bool(req.done and not req.cancelled)
+    ttft = (req.t_first - req.t_submit) if req.t_first else None
+    latency = (req.t_done - req.t_submit) if req.t_done else None
+    attained = completed and (ttft_slo_s is None
+                              or (ttft is not None and ttft <= ttft_slo_s))
+    return RequestOutcome(idx=idx, rid=req.rid, n_tokens=len(req.out_tokens),
+                          finish_reason=req.finish_reason, completed=completed,
+                          ttft_s=ttft, latency_s=latency, slo_attained=attained)
+
+
+def goodput_tok_per_s(outcomes, wall_s: float) -> float:
+    """SLO-attained tokens per wall-clock second (0 when nothing attained)."""
+    if wall_s <= 0:
+        raise ValueError("wall_s must be > 0")
+    return sum(o.n_tokens for o in outcomes if o.slo_attained) / wall_s
+
+
+def traffic_row(*, result, registry, **labels) -> dict:
+    """One BENCH_traffic.json row: labels + outcome counts + shared summary.
+
+    ``result`` is a :class:`~repro.traffic.runner.TrafficResult`; ``labels``
+    (family/arch/scenario/…) pass through verbatim.
+    """
+    outs = result.outcomes
+    toks = sum(o.n_tokens for o in outs)
+    return {
+        **labels,
+        "n_requests": len(outs),
+        "n_completed": sum(o.completed for o in outs),
+        "n_cancelled": sum(o.finish_reason == "user" for o in outs),
+        "n_deadline_missed": sum(o.finish_reason == "deadline" for o in outs),
+        "n_slo_attained": sum(o.slo_attained for o in outs),
+        "wall_s": result.wall_s,
+        "time_scale": result.time_scale,
+        "tok_per_s": toks / result.wall_s if result.wall_s > 0 else 0.0,
+        "goodput_tok_per_s": goodput_tok_per_s(outs, result.wall_s),
+        **registry_summary(registry),
+    }
+
+
+def check_traffic_schema(rec: dict) -> None:
+    """Assert a BENCH_traffic.json record has the acceptance shape."""
+    for key in ("scenarios", "note", "rows"):
+        assert key in rec, f"missing top-level key {key!r}"
+    rows = rec["rows"]
+    assert rows, "no rows"
+    assert len({r["family"] for r in rows}) >= 3, "need >= 3 model families"
+    assert len({r["scenario"] for r in rows}) >= 2, \
+        "need >= 2 arrival scenarios"
+    for r in rows:
+        ctx = f"row {r.get('family')}/{r.get('scenario')}"
+        for key in ("family", "arch", "scenario", "workload", "n_requests",
+                    "n_completed", "n_cancelled", "n_deadline_missed",
+                    "wall_s", "tok_per_s", "goodput_tok_per_s", "ttft_s",
+                    "inter_token_s", "tokens", "decode_ticks", "preempts",
+                    "cancels", "deadline_misses"):
+            assert key in r, f"{ctx}: missing {key!r}"
+        for block in ("ttft_s", "inter_token_s"):
+            for f in PCT_FIELDS:
+                assert f in r[block], f"{ctx}: {block} missing {f!r}"
+            assert r[block]["count"] > 0, f"{ctx}: empty {block} histogram"
+            for f in ("p50", "p95", "p99"):
+                assert r[block][f] is not None and r[block][f] > 0, \
+                    f"{ctx}: {block}.{f}"
+        assert float(r["wall_s"]) > 0, f"{ctx}: wall_s"
+        assert float(r["goodput_tok_per_s"]) <= float(r["tok_per_s"]) + 1e-9, \
+            f"{ctx}: goodput exceeds throughput"
+        assert r["n_completed"] + r["n_cancelled"] + r["n_deadline_missed"] \
+            == r["n_requests"], f"{ctx}: outcome counts do not partition"
+        # obs-registry cancels cover both client cancels and deadline expiry
+        assert r["cancels"] == r["n_cancelled"] + r["n_deadline_missed"], \
+            f"{ctx}: registry cancel count disagrees with outcomes"

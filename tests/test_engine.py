@@ -190,3 +190,93 @@ def test_paged_engine_alias_still_serves():
     req = eng.submit([3, 1, 4], max_tokens=4)
     eng.run()
     assert req.out_tokens == _ref_generate(model, params, [3, 1, 4], 4)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation, deadlines, admission policy, drained reuse (sync engine)
+# ---------------------------------------------------------------------------
+def test_deadline_validation_and_expiry():
+    model, params = _tiny()
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4)
+    for bad in (0, -0.5):
+        with pytest.raises(ValueError, match="deadline_s"):
+            eng.submit([1, 2, 3], max_tokens=2, deadline_s=bad)
+    assert not eng.pending()  # rejected before enqueue
+    doomed = eng.submit([1, 2, 3], max_tokens=4, deadline_s=1e-9)
+    ok = eng.submit([4, 5, 6], max_tokens=4)
+    done = eng.run()
+    assert doomed.cancelled and doomed.finish_reason == "deadline"
+    assert ok.done and not ok.cancelled and len(ok.out_tokens) == 4
+    assert {r.rid for r in done} == {doomed.rid, ok.rid}
+
+
+def test_cancel_active_request_frees_blocks_for_waiter():
+    """Cancelling a mid-flight request releases its slot and blocks; emitted
+    tokens are kept; a waiting request then serves identically to running
+    alone."""
+    model, params = _tiny()
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4,
+                 num_blocks=12, prefill_chunk=8)
+    victim = eng.submit([1, 2, 3], max_tokens=30)
+    waiter = eng.submit([4, 5, 6], max_tokens=4)
+    for _ in range(4):  # admit + a few decode ticks
+        eng.tick()
+    assert not victim.done and eng.slot_req[0] is victim
+    n_before = len(victim.out_tokens)
+    assert eng.cancel(victim)
+    assert victim.cancelled and victim.finish_reason == "user"
+    assert victim.out_tokens == \
+        _ref_generate(model, params, [1, 2, 3], n_before)
+    assert eng.slot_req[0] is None
+    assert eng.manager.num_free == eng.manager.num_blocks - 1
+    eng.run()
+    assert waiter.out_tokens == _ref_generate(model, params, [4, 5, 6], 4)
+    assert eng.cancel(victim) is False  # cancelling a done request: no-op
+    assert eng.manager.num_free == eng.manager.num_blocks - 1
+
+
+def test_cancel_queued_request_never_admits():
+    model, params = _tiny()
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4)
+    active = eng.submit([1, 2, 3], max_tokens=6)
+    queued = eng.submit([4, 5, 6], max_tokens=6)
+    eng.tick()  # admits only the first (one slot)
+    assert eng.cancel(queued)
+    eng.run()
+    assert queued.cancelled and queued.out_tokens == []
+    assert active.done and len(active.out_tokens) == 6
+
+
+def test_edf_admission_prefers_nearest_deadline():
+    from repro.serve.engine import EDFAdmission, FCFSAdmission
+
+    model, params = _tiny()
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4,
+                 admission=EDFAdmission())
+    late = eng.submit([1, 2, 3], max_tokens=2, deadline_s=60.0)
+    soon = eng.submit([4, 5, 6], max_tokens=2, deadline_s=30.0)
+    free = eng.submit([7, 8, 9], max_tokens=2)  # deadline-free goes last
+    assert [r.rid for r in eng.admission.order(list(eng.queue), 0.0)] == \
+        [soon.rid, late.rid, free.rid]
+    eng.tick()  # one slot: EDF admits the nearest deadline first
+    assert eng.slot_req[0] is soon or soon.done
+    eng.run()
+    assert all(r.done and not r.cancelled for r in (late, soon, free))
+    # FCFS is insensitive to deadlines
+    assert [r.rid for r in FCFSAdmission().order([late, soon, free], 0.0)] \
+        == [late.rid, soon.rid, free.rid]
+
+
+def test_run_returns_only_new_finishes_after_drain():
+    """A drained engine stays usable, and run() never replays the previous
+    batch's requests in its return value."""
+    model, params = _tiny()
+    eng = Engine(model, params, slots=1, max_len=64, block_size=4)
+    first = eng.submit([1, 2, 3], max_tokens=3)
+    done1 = eng.run()
+    assert [r.rid for r in done1] == [first.rid]
+    second = eng.submit([4, 5, 6], max_tokens=3)
+    done2 = eng.run()
+    assert [r.rid for r in done2] == [second.rid]
+    assert second.out_tokens == _ref_generate(model, params, [4, 5, 6], 3)
+    assert len(eng.finished) == 2  # cumulative history still intact

@@ -447,3 +447,61 @@ def test_trainer_metrics(tmp_path, key):
     assert obs.registry.get("train_tokens_per_second").value > 0
     # JSON round-trip of the summary (what BENCH files embed)
     json.dumps(bench_summary(obs.registry))
+
+
+# ---------------------------------------------------------------------------
+# Cancellation / deadline events: schema + causal ordering + slot reuse
+# ---------------------------------------------------------------------------
+def test_cancel_trace_ordering_and_slot_reuse():
+    """submit <= admit <= cancel in the trace, the cancel names the freed
+    slot, and a later admit reuses that slot after the cancel's seq."""
+    model, params, _ = fuzz._setup("dense")
+    obs = Observer()
+    eng = Engine(model, params, slots=1, max_len=96, block_size=8,
+                 prefill_chunk=8, obs=obs)
+    victim = eng.submit([1, 2, 3], max_tokens=40)
+    waiter = eng.submit([4, 5, 6], max_tokens=4)
+    for _ in range(3):
+        eng.tick()
+    assert eng.cancel(victim)
+    eng.run()
+    assert waiter.done and not waiter.cancelled
+    events = obs.trace.events
+    assert validate_events(events) == []
+    by = {e["ev"]: e for e in events if e.get("rid") == victim.rid}
+    assert by["submit"]["seq"] <= by["admit"]["seq"] <= by["cancel"]["seq"]
+    assert by["submit"]["t"] <= by["admit"]["t"] <= by["cancel"]["t"]
+    assert by["cancel"]["slot"] == by["admit"]["slot"] == 0
+    assert by["cancel"]["reason"] == "user"
+    assert "finish" not in by  # a cancel is terminal, never double-finished
+    waiter_admit, = [e for e in events if e["ev"] == "admit"
+                     and e["rid"] == waiter.rid]
+    assert waiter_admit["slot"] == 0  # the cancelled request's slot, reused
+    assert waiter_admit["seq"] > by["cancel"]["seq"]
+    assert obs.registry.get("serve_cancellations_total").value == 1
+
+
+def test_cancel_queued_and_deadline_events_validate():
+    model, params, _ = fuzz._setup("dense")
+    obs = Observer()
+    eng = Engine(model, params, slots=1, max_len=96, block_size=8,
+                 prefill_chunk=8, obs=obs)
+    active = eng.submit([1, 2, 3], max_tokens=4)
+    queued = eng.submit([4, 5, 6], max_tokens=4)
+    doomed = eng.submit([7, 8, 9], max_tokens=4, deadline_s=1e-9)
+    eng.tick()
+    assert eng.cancel(queued)
+    eng.run()
+    assert active.done and not active.cancelled
+    events = obs.trace.events
+    assert validate_events(events) == []
+    cancel_q, = [e for e in events if e["ev"] == "cancel"
+                 and e["rid"] == queued.rid]
+    assert cancel_q["slot"] == -1  # cancelled before ever holding a slot
+    miss, = [e for e in events if e["ev"] == "deadline_miss"]
+    assert miss["rid"] == doomed.rid and miss["deadline_s"] == 1e-9
+    cancel_d, = [e for e in events if e["ev"] == "cancel"
+                 and e["rid"] == doomed.rid]
+    assert cancel_d["reason"] == "deadline" and cancel_d["seq"] > miss["seq"]
+    assert obs.registry.get("serve_deadline_miss_total").value == 1
+    assert obs.registry.get("serve_cancellations_total").value == 2

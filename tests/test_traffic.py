@@ -1,0 +1,206 @@
+"""repro.traffic: workload determinism, replay integration, shared schema.
+
+Workload expansion must be bit-deterministic by seed (the BENCH rows embed
+the spec, so a row is re-runnable), arrival processes must have their
+declared shape, and the runner's outcome accounting must agree with the obs
+registry — the goodput and cancel numbers in ``BENCH_traffic.json`` are only
+trustworthy if the two bookkeeping paths cannot drift.
+"""
+import numpy as np
+import pytest
+import test_serve_fuzz as fuzz
+
+from repro.obs import Observer
+from repro.serve import AsyncEngine
+from repro.serve.engine import Engine, Request
+from repro.traffic import (
+    WorkloadSpec,
+    check_traffic_schema,
+    drive,
+    goodput_tok_per_s,
+    make_workload,
+    outcome_of,
+    pct_row,
+    registry_summary,
+    traffic_row,
+)
+
+
+# ---------------------------------------------------------------------------
+# Workload expansion
+# ---------------------------------------------------------------------------
+def test_workload_deterministic_by_seed():
+    spec = WorkloadSpec(n_requests=20, cancel_prob=0.3, ttft_slo_s=0.2,
+                        deadline_s=5.0, seed=42)
+    a, b = make_workload(spec), make_workload(spec)
+    assert [(r.t_arrival, r.prompt, r.max_tokens, r.cancel_after_s)
+            for r in a] == \
+           [(r.t_arrival, r.prompt, r.max_tokens, r.cancel_after_s)
+            for r in b]
+    c = make_workload(WorkloadSpec(n_requests=20, cancel_prob=0.3,
+                                   ttft_slo_s=0.2, deadline_s=5.0, seed=43))
+    assert [r.t_arrival for r in a] != [r.t_arrival for r in c]
+    # fields ride through; arrivals are sorted; lengths come from the buckets
+    for i, r in enumerate(a):
+        assert r.idx == i
+        assert r.ttft_slo_s == 0.2 and r.deadline_s == 5.0
+        assert len(r.prompt) in spec.prompt_len_buckets
+        assert r.max_tokens in spec.out_tokens_buckets
+        assert all(1 <= t < spec.vocab for t in r.prompt)
+    assert [r.t_arrival for r in a] == sorted(r.t_arrival for r in a)
+    assert any(r.cancel_after_s is not None for r in a)
+
+
+def test_workload_bursty_arrivals_grouped():
+    spec = WorkloadSpec(n_requests=10, arrival="bursty", burst_size=4, seed=1)
+    reqs = make_workload(spec)
+    times = [r.t_arrival for r in reqs]
+    # bursts of burst_size share one arrival instant (last burst may be short)
+    assert times[0] == times[1] == times[2] == times[3]
+    assert times[4] == times[5] == times[6] == times[7]
+    assert times[8] == times[9]
+    assert times[3] < times[4] < times[8]
+
+
+def test_workload_validation():
+    for bad in (dict(n_requests=0), dict(arrival="uniform"),
+                dict(rate_rps=0.0), dict(arrival="bursty", burst_size=0),
+                dict(prompt_len_weights=(1.0,)),  # length mismatch
+                dict(out_tokens_buckets=(0, 4)),
+                dict(prompt_len_weights=(0.0, 0.0, 0.0)),
+                dict(vocab=1), dict(cancel_prob=1.5),
+                dict(cancel_window_s=(0.5, 0.1)), dict(ttft_slo_s=0.0),
+                dict(deadline_s=-1.0)):
+        with pytest.raises(ValueError):
+            make_workload(WorkloadSpec(**bad))
+    # to_dict round-trips through the constructor (BENCH rows re-runnable)
+    spec = WorkloadSpec(arrival="bursty", cancel_prob=0.2, seed=9)
+    d = spec.to_dict()
+    d["prompt_len_buckets"] = tuple(d["prompt_len_buckets"])
+    d["prompt_len_weights"] = tuple(d["prompt_len_weights"])
+    d["out_tokens_buckets"] = tuple(d["out_tokens_buckets"])
+    d["out_tokens_weights"] = tuple(d["out_tokens_weights"])
+    d["cancel_window_s"] = tuple(d["cancel_window_s"])
+    assert make_workload(WorkloadSpec(**d)) == make_workload(spec)
+
+
+# ---------------------------------------------------------------------------
+# Report helpers (the schema BENCH_serve and BENCH_traffic share)
+# ---------------------------------------------------------------------------
+def test_pct_row_none_safe():
+    assert pct_row(None) == {"count": 0, "mean": None, "p50": None,
+                             "p95": None, "p99": None}
+    from repro.obs import Histogram
+    h = Histogram(boundaries=[1.0, 2.0])
+    assert pct_row(h)["count"] == 0 and pct_row(h)["p99"] is None
+    h.observe(0.5)
+    row = pct_row(h)
+    assert row["count"] == 1 and row["p50"] == 0.5 and row["mean"] == 0.5
+
+
+def test_outcome_and_goodput_accounting():
+    def req(n_out, *, t_first, t_done, cancelled=False, reason="max_tokens"):
+        r = Request(rid=0, prompt=[1], max_tokens=8, t_submit=10.0)
+        r.out_tokens = list(range(n_out))
+        r.done = True
+        r.cancelled = cancelled
+        r.finish_reason = reason
+        r.t_first, r.t_done = t_first, t_done
+        return r
+
+    fast = outcome_of(req(8, t_first=10.1, t_done=10.5), ttft_slo_s=0.2)
+    slow = outcome_of(req(8, t_first=10.4, t_done=10.9), ttft_slo_s=0.2)
+    gone = outcome_of(req(3, t_first=10.1, t_done=10.2, cancelled=True,
+                          reason="user"), ttft_slo_s=0.2)
+    assert fast.slo_attained and fast.completed
+    assert fast.ttft_s == pytest.approx(0.1)
+    assert not slow.slo_attained and slow.completed  # finished but late
+    assert not gone.slo_attained and not gone.completed
+    # goodput counts only SLO-attained tokens; throughput counts them all
+    assert goodput_tok_per_s([fast, slow, gone], 2.0) == pytest.approx(4.0)
+    # no SLO: every completed request attains
+    assert outcome_of(req(8, t_first=10.4, t_done=10.9)).slo_attained
+    with pytest.raises(ValueError):
+        goodput_tok_per_s([fast], 0.0)
+
+
+def test_registry_summary_absent_metrics():
+    from repro.obs import MetricsRegistry
+    s = registry_summary(MetricsRegistry())
+    assert s["tokens"] == 0 and s["cancels"] == 0 and s["preempts"] == 0
+    assert s["ttft_s"]["count"] == 0 and s["inter_token_s"]["p99"] is None
+
+
+# ---------------------------------------------------------------------------
+# Replay integration: runner outcomes must agree with the obs registry
+# ---------------------------------------------------------------------------
+def test_traffic_replay_smoke():
+    model, params, _ = fuzz._setup("dense")
+    spec = WorkloadSpec(
+        n_requests=8, arrival="poisson", rate_rps=200.0,
+        prompt_len_buckets=(3, 8), prompt_len_weights=(0.6, 0.4),
+        out_tokens_buckets=(3, 10), out_tokens_weights=(0.5, 0.5),
+        vocab=model.cfg.vocab_size, ttft_slo_s=0.5, cancel_prob=0.4,
+        cancel_window_s=(0.001, 0.01), seed=5)
+    requests = make_workload(spec)
+    obs = Observer()
+    frontend = AsyncEngine(engine=Engine(model, params, slots=2, max_len=96,
+                                         block_size=8, prefill_chunk=8,
+                                         obs=obs))
+    result = drive(frontend, requests, time_scale=1.0)
+    outs = result.outcomes
+    assert len(outs) == 8 and result.wall_s > 0
+    n_completed = sum(o.completed for o in outs)
+    n_cancelled = sum(o.finish_reason == "user" for o in outs)
+    assert n_completed + n_cancelled == 8  # no deadlines in this spec
+    # the two bookkeeping paths agree: registry vs outcome accounting
+    reg = obs.registry
+    assert reg.get("serve_tokens_total").value == \
+        sum(o.n_tokens for o in outs)
+    cancels = reg.get("serve_cancellations_total")
+    assert (cancels.value if cancels else 0) == n_cancelled
+    row = traffic_row(result=result, registry=reg, family="dense",
+                      arch="tinyllama-1.1b", scenario="poisson",
+                      workload=spec.to_dict())
+    assert row["goodput_tok_per_s"] <= row["tok_per_s"] + 1e-9
+    assert row["ttft_s"]["count"] > 0
+    assert row["n_completed"] == n_completed
+
+
+def test_time_scale_stretches_schedule():
+    model, params, _ = fuzz._setup("dense")
+    spec = WorkloadSpec(n_requests=3, rate_rps=50.0, vocab=64,
+                        prompt_len_buckets=(3,), prompt_len_weights=(1.0,),
+                        out_tokens_buckets=(3,), out_tokens_weights=(1.0,),
+                        seed=2)
+    requests = make_workload(spec)
+    frontend = AsyncEngine(model, params, slots=2, max_len=96,
+                           prefill_chunk=8)
+    result = drive(frontend, requests, time_scale=4.0)
+    # the last arrival alone bounds the wall clock from below
+    assert result.wall_s >= requests[-1].t_arrival * 4.0
+    assert all(o.completed for o in result.outcomes)
+    with pytest.raises(ValueError):
+        drive(frontend, requests, time_scale=0.0)
+
+
+def test_check_traffic_schema_rejects_malformed():
+    with pytest.raises(AssertionError):
+        check_traffic_schema({"rows": []})
+    ok_pct = {"count": 1, "mean": 0.1, "p50": 0.1, "p95": 0.1, "p99": 0.1}
+    rows = [{"family": f, "arch": "a", "scenario": s, "workload": {},
+             "n_requests": 1, "n_completed": 1, "n_cancelled": 0,
+             "n_deadline_missed": 0, "n_slo_attained": 1, "wall_s": 1.0,
+             "time_scale": 1.0, "tok_per_s": 5.0, "goodput_tok_per_s": 5.0,
+             "ttft_s": dict(ok_pct), "inter_token_s": dict(ok_pct),
+             "queue_s": dict(ok_pct), "tokens": 5, "decode_ticks": 5,
+             "preempts": 0, "cancels": 0, "deadline_misses": 0}
+            for f in ("a", "b", "c") for s in ("poisson", "bursty")]
+    rec = {"scenarios": {}, "note": "", "rows": rows}
+    check_traffic_schema(rec)  # well-formed passes
+    bad = {**rec, "rows": [dict(r, goodput_tok_per_s=99.0) for r in rows]}
+    with pytest.raises(AssertionError, match="goodput"):
+        check_traffic_schema(bad)
+    bad = {**rec, "rows": [dict(r, cancels=3) for r in rows]}
+    with pytest.raises(AssertionError, match="cancel"):
+        check_traffic_schema(bad)
