@@ -182,27 +182,16 @@ def smoke(report=print):
 
 
 def check_schema(path, report=print):
-    """Validate BENCH_compressed_serve.json against the acceptance shape."""
-    rec = json.loads(Path(path).read_text())
-    for key in ("workload", "note", "rows"):
-        assert key in rec, f"missing top-level key {key!r}"
-    rows = rec["rows"]
-    assert len({r["variant"] for r in rows}) >= 3, "need >= 3 variants"
-    assert len({r["arch"] for r in rows}) >= 2, "need >= 2 configs"
-    for r in rows:
-        ctx = f"row {r.get('arch')}/{r.get('variant')}"
-        for key in ("arch", "variant", "cr", "backends", "ttft_s",
-                    "tok_per_s", "tokens", "wall_s"):
-            assert key in r, f"{ctx}: missing {key!r}"
-        for key in ("block", "network", "network_with_embed", "bits"):
-            assert float(r["cr"][key]) >= 1.0, f"{ctx}: cr.{key} < 1"
-        for key in ("p50", "p95"):
-            assert r["ttft_s"][key] is not None and r["ttft_s"][key] > 0, \
-                f"{ctx}: ttft_s.{key} missing"
-        assert float(r["tok_per_s"]) > 0, f"{ctx}: tok_per_s"
-        assert r["backends"] and all(
-            isinstance(k, str) and isinstance(v, str)
-            for k, v in r["backends"].items()), f"{ctx}: backends"
+    """Validate BENCH_compressed_serve.json against the acceptance shape.
+
+    Delegates to the shared BENCH schema table (``repro.analyze.bench``) —
+    the same validation ``python -m repro.analyze --bench`` runs in CI.
+    """
+    from repro.analyze.bench import check_file
+
+    errors = check_file("compressed_serve", Path(path))
+    assert not errors, "; ".join(errors)
+    rows = json.loads(Path(path).read_text())["rows"]
     report(f"schema OK: {path} ({len(rows)} rows, "
            f"{len({r['variant'] for r in rows})} variants x "
            f"{len({r['arch'] for r in rows})} configs)")

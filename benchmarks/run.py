@@ -19,50 +19,50 @@ def main() -> None:
     print("=" * 72)
     print("Table I - compression ratios (paper: 481.88x / 1446.44x / 10.72x / 1.94x)")
     print("=" * 72)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = table1_cr.run()
-    csv.append(("table1_cr", (time.time() - t0) * 1e6,
+    csv.append(("table1_cr", (time.perf_counter() - t0) * 1e6,
                 f"chatglm_block_cr={next(r[1] for r in rows if r[0]=='chatglm3-6b'):.2f}"))
 
     print("\n" + "=" * 72)
     print("Tables III/IV + Fig. 8 - GVSA latency model (paper: 1.45x / 1.57x)")
     print("=" * 72)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = gvsa_latency.run()
-    csv.append(("gvsa_latency", (time.time() - t0) * 1e6,
+    csv.append(("gvsa_latency", (time.perf_counter() - t0) * 1e6,
                 f"first_token_reduction={rows[0][3]:.2f}x/{rows[1][3]:.2f}x"))
 
     print("\n" + "=" * 72)
     print("Fig. 9a - decode speed vs decoded tokens")
     print("=" * 72)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = decode_speed.run()
-    csv.append(("decode_speed", (time.time() - t0) * 1e6,
+    csv.append(("decode_speed", (time.perf_counter() - t0) * 1e6,
                 f"speedup@2048={rows[3][2]/rows[3][3]:.2f}x"))
 
     print("\n" + "=" * 72)
     print("Kernel microbench - dense vs TT staged contraction")
     print("=" * 72)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = kernel_bench.run()
-    csv.append(("kernel_bench", (time.time() - t0) * 1e6,
+    csv.append(("kernel_bench", (time.perf_counter() - t0) * 1e6,
                 f"tt_speedup={rows[0][1]/rows[0][2]:.2f}x"))
 
     print("\n" + "=" * 72)
     print("Accuracy analogue - PPL delta vs TT rank (paper: +2.62 PPL at r=16)")
     print("=" * 72)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = ppl_delta.run()
-    csv.append(("ppl_delta", (time.time() - t0) * 1e6,
+    csv.append(("ppl_delta", (time.perf_counter() - t0) * 1e6,
                 f"ppl_delta_r16={rows[-1][3]:.3f}"))
 
     print("\n" + "=" * 72)
     print("Roofline - per (arch x cell), single-pod (see EXPERIMENTS.md)")
     print("=" * 72)
-    t0 = time.time()
+    t0 = time.perf_counter()
     rrows = roofline.run()
     done = [r for r in rrows if not r.skipped]
-    csv.append(("roofline", (time.time() - t0) * 1e6, f"cells={len(done)}"))
+    csv.append(("roofline", (time.perf_counter() - t0) * 1e6, f"cells={len(done)}"))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

@@ -168,12 +168,16 @@ def smoke(report=print, out_path: str = "BENCH_traffic.json"):
 
 
 def check_schema(path, report=print):
-    """Validate a BENCH_traffic.json against the acceptance shape."""
-    from repro.traffic import check_traffic_schema
+    """Validate a BENCH_traffic.json against the acceptance shape.
 
-    rec = json.loads(Path(path).read_text())
-    check_traffic_schema(rec)
-    rows = rec["rows"]
+    Delegates to the shared BENCH schema table (``repro.analyze.bench``) —
+    the same validation ``python -m repro.analyze --bench`` runs in CI.
+    """
+    from repro.analyze.bench import check_file
+
+    errors = check_file("traffic", Path(path))
+    assert not errors, "; ".join(errors)
+    rows = json.loads(Path(path).read_text())["rows"]
     report(f"schema OK: {path} ({len(rows)} rows, "
            f"{len({r['family'] for r in rows})} families x "
            f"{len({r['scenario'] for r in rows})} scenarios)")

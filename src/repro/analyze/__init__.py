@@ -1,0 +1,43 @@
+"""repro.analyze — repo-aware static analysis (the invariant linter).
+
+Pure-``ast`` checks for the invariants this codebase's tests can only
+probe dynamically and locally: dispatch-registry completeness, hot-path
+host syncs, jit cache-key hygiene, Pallas legality, monotonic-clock
+discipline, trace-schema conformance, deprecated-API creep — plus the
+shared BENCH report schema checker.  CLI: ``python -m repro.analyze
+[--strict] [--rule FAMILY] [--bench] [paths...]``.  See DESIGN.md §13.
+"""
+from .core import (
+    AnalyzeConfig,
+    Finding,
+    RepoIndex,
+    SourceFile,
+    baselined,
+    load_baseline,
+    run_analysis,
+)
+from .rules import ALL_RULES, BY_FAMILY
+
+__all__ = [
+    "ALL_RULES",
+    "AnalyzeConfig",
+    "BY_FAMILY",
+    "Finding",
+    "RepoIndex",
+    "SourceFile",
+    "analyze_paths",
+    "baselined",
+    "load_baseline",
+    "run_analysis",
+]
+
+
+def analyze_paths(paths, root, rules=None, config=None):
+    """Convenience wrapper: index ``paths`` under ``root`` and run rules.
+
+    Returns ``(findings, suppressed)`` like :func:`run_analysis`.
+    """
+    from pathlib import Path
+
+    index = RepoIndex(Path(root), [Path(p) for p in paths])
+    return run_analysis(index, rules or ALL_RULES, config)

@@ -1,0 +1,128 @@
+"""CLI for the invariant linter: ``python -m repro.analyze``.
+
+Default run lints ``src benchmarks examples tests`` under the repo root
+and prints findings with fix hints.  Exit code:
+
+* ``0`` — no findings (or, without ``--strict``, only baselined ones);
+* ``1`` — findings (``--strict`` also fails on baselined findings being
+  *stale*, i.e. baseline entries that no longer match anything).
+
+``--bench`` instead validates the four ``BENCH_*.json`` reports against
+the shared schema table (``repro.analyze.bench``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import bench as bench_mod
+from .core import (
+    BASELINE_NAME,
+    AnalyzeConfig,
+    RepoIndex,
+    baselined,
+    load_baseline,
+    run_analysis,
+)
+from .rules import ALL_RULES, BY_FAMILY
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples", "tests")
+
+
+def _find_root(start: Path) -> Path:
+    """Nearest ancestor holding pyproject.toml (else ``start`` itself)."""
+    cur = start.resolve()
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").exists():
+            return cand
+    return cur
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analyze",
+        description="repo-aware static analysis: kernel/dispatch/jit/obs "
+                    "invariant linter (DESIGN.md §13)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src benchmarks "
+                         "examples tests under --root)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: nearest ancestor with "
+                         "pyproject.toml)")
+    ap.add_argument("--rule", action="append", dest="rules", metavar="FAMILY",
+                    choices=sorted(BY_FAMILY),
+                    help="run only this rule family (repeatable)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on baselined findings' staleness too; this is "
+                         "the CI gate")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: <root>/{BASELINE_NAME})")
+    ap.add_argument("--vmem-budget", type=int,
+                    default=AnalyzeConfig.vmem_budget_bytes, metavar="BYTES",
+                    help="Pallas per-tile VMEM budget for PAL004")
+    ap.add_argument("--bench", action="store_true",
+                    help="validate BENCH_*.json reports instead of linting")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON (machine-readable)")
+    args = ap.parse_args(argv)
+
+    root = (args.root or _find_root(Path.cwd())).resolve()
+
+    if args.list_rules:
+        for mod in ALL_RULES:
+            print(f"{mod.FAMILY}:")
+            for code, desc in mod.CODES.items():
+                print(f"  {code}  {desc}")
+        return 0
+
+    if args.bench:
+        errors = bench_mod.check_all(root)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1 if errors else 0
+
+    rules = [BY_FAMILY[f] for f in args.rules] if args.rules else ALL_RULES
+    paths = [Path(p) for p in args.paths] if args.paths else \
+        [root / p for p in DEFAULT_PATHS if (root / p).exists()]
+    config = AnalyzeConfig(vmem_budget_bytes=args.vmem_budget)
+    index = RepoIndex(root, paths)
+    findings, suppressed = run_analysis(index, rules, config)
+
+    baseline_path = args.baseline or (root / BASELINE_NAME)
+    entries = load_baseline(baseline_path)
+    live = [f for f in findings if not baselined(f, entries)]
+    grandfathered = [f for f in findings if baselined(f, entries)]
+    stale = [e for e in entries
+             if not any(baselined(f, [e]) for f in findings)]
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.to_dict() for f in live],
+            "baselined": [f.to_dict() for f in grandfathered],
+            "suppressed": len(suppressed),
+        }, indent=1))
+    else:
+        for f in live:
+            print(f.render())
+        summary = (f"{len(live)} finding(s), {len(grandfathered)} "
+                   f"baselined, {len(suppressed)} inline-suppressed "
+                   f"across {len(index.files)} files")
+        print(("FAIL: " if live else "OK: ") + summary)
+        if args.strict and stale:
+            for e in stale:
+                print(f"stale baseline entry (no longer matches anything): "
+                      f"{e}", file=sys.stderr)
+
+    if live:
+        return 1
+    if args.strict and stale:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,247 @@
+"""Shared schema checker for the four ``BENCH_*.json`` reports.
+
+Before this module, ``benchmarks/traffic.py`` and
+``benchmarks/compressed_serve.py`` each hand-rolled a ``--check-schema``
+path while ``BENCH_kernels.json`` / ``BENCH_serve.json`` had none.  One
+declarative table now describes all four acceptance shapes; the benchmark
+``--check-schema`` flags delegate here and ``python -m repro.analyze
+--bench`` validates every report in one CI step.
+
+A schema is: required top-level keys, required per-row fields, percentile
+blocks (``{count, mean, p50, p95, p99}`` with positive percentiles), row
+diversity floors (e.g. >= 3 model families), and cross-field invariants
+(goodput <= throughput; outcome counts partition the request count; kernel
+parity error under tolerance).  Checks collect *all* errors instead of
+stopping at the first assert, so a broken report shows its whole shape
+diff at once.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from pathlib import Path
+
+PCT_FIELDS = ("count", "mean", "p50", "p95", "p99")
+
+# max parity error a kernels report may carry — matches the interpret-mode
+# parity gates in tests/test_kernels.py (f32 kernels sit ~1e-6)
+KERNEL_REL_ERR_TOL = 1e-3
+
+
+@dataclass(frozen=True)
+class BenchSchema:
+    """Declarative acceptance shape for one BENCH report."""
+
+    name: str
+    filename: str
+    top_keys: tuple[str, ...]
+    row_fields: tuple[str, ...]
+    pct_blocks: tuple[str, ...] = ()
+    # field -> minimum number of distinct values across rows
+    diversity: dict = field(default_factory=dict)
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool) \
+        and math.isfinite(x)
+
+
+def _check_rows_common(schema: BenchSchema, rec: dict, errors: list[str]):
+    rows = rec.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{schema.name}: 'rows' missing or empty")
+        return []
+    for i, r in enumerate(rows):
+        ctx = f"{schema.name} row {i}"
+        for key in schema.row_fields:
+            if key not in r:
+                errors.append(f"{ctx}: missing field {key!r}")
+        for block in schema.pct_blocks:
+            b = r.get(block)
+            if not isinstance(b, dict):
+                errors.append(f"{ctx}: {block} is not a percentile block")
+                continue
+            for f in ("p50", "p95", "p99"):
+                if f in b and not (b[f] is not None and _num(b[f])
+                                   and b[f] > 0):
+                    errors.append(f"{ctx}: {block}.{f} not positive")
+    for key, floor in schema.diversity.items():
+        seen = {r.get(key) for r in rows if key in r}
+        if len(seen) < floor:
+            errors.append(f"{schema.name}: need >= {floor} distinct "
+                          f"{key!r} values, got {len(seen)} ({sorted(map(str, seen))})")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Per-report cross-field invariants
+# ---------------------------------------------------------------------------
+def _invariants_traffic(rows, errors):
+    for i, r in enumerate(rows):
+        ctx = f"traffic row {i} ({r.get('family')}/{r.get('scenario')})"
+        _pos(r, "wall_s", ctx, errors)
+        _goodput_le_throughput(r, ctx, errors)
+        if all(k in r for k in ("n_completed", "n_cancelled",
+                                "n_deadline_missed", "n_requests")):
+            if r["n_completed"] + r["n_cancelled"] + r["n_deadline_missed"] \
+                    != r["n_requests"]:
+                errors.append(f"{ctx}: outcome counts do not partition "
+                              f"n_requests")
+        if all(k in r for k in ("cancels", "n_cancelled",
+                                "n_deadline_missed")):
+            # obs-registry cancels cover client cancels + deadline expiry
+            if r["cancels"] != r["n_cancelled"] + r["n_deadline_missed"]:
+                errors.append(f"{ctx}: registry cancel count disagrees with "
+                              f"outcomes")
+        for block in ("ttft_s", "inter_token_s"):
+            b = r.get(block)
+            if isinstance(b, dict) and not (b.get("count") or 0) > 0:
+                errors.append(f"{ctx}: empty {block} histogram")
+
+
+def _invariants_serve(rows, errors):
+    for i, r in enumerate(rows):
+        ctx = f"serve row {i} ({r.get('family')}/{r.get('arch')})"
+        _pos(r, "wall_s", ctx, errors)
+        _pos(r, "tok_per_s", ctx, errors)
+        _goodput_le_throughput(r, ctx, errors)
+
+
+def _invariants_compressed(rows, errors):
+    for i, r in enumerate(rows):
+        ctx = f"compressed_serve row {i} ({r.get('arch')}/{r.get('variant')})"
+        _pos(r, "tok_per_s", ctx, errors)
+        cr = r.get("cr")
+        if isinstance(cr, dict):
+            for key in ("block", "network", "network_with_embed", "bits"):
+                v = cr.get(key)
+                if not (_num(v) and v >= 1.0):
+                    errors.append(f"{ctx}: cr.{key} missing or < 1")
+        else:
+            errors.append(f"{ctx}: cr is not a dict")
+        be = r.get("backends")
+        if not (isinstance(be, dict) and be and all(
+                isinstance(k, str) and isinstance(v, str)
+                for k, v in be.items())):
+            errors.append(f"{ctx}: backends must be a non-empty str->str map")
+
+
+def _invariants_kernels(rows, errors):
+    for i, r in enumerate(rows):
+        ctx = f"kernels row {i} ({r.get('name')})"
+        _pos(r, "ref_us", ctx, errors)
+        _pos(r, "pallas_interpret_us", ctx, errors)
+        err = r.get("max_rel_err")
+        if not (_num(err) and 0 <= err <= KERNEL_REL_ERR_TOL):
+            errors.append(f"{ctx}: max_rel_err {err!r} outside "
+                          f"[0, {KERNEL_REL_ERR_TOL}] — kernel/oracle parity "
+                          f"is the report's whole point")
+        if r.get("timings_representative") is not False:
+            errors.append(f"{ctx}: interpret-mode timings must be marked "
+                          f"timings_representative=false")
+
+
+def _pos(r, key, ctx, errors):
+    if key in r and not (_num(r[key]) and r[key] > 0):
+        errors.append(f"{ctx}: {key} not positive")
+
+
+def _goodput_le_throughput(r, ctx, errors):
+    if "goodput_tok_per_s" in r and "tok_per_s" in r and \
+            _num(r["goodput_tok_per_s"]) and _num(r["tok_per_s"]):
+        if r["goodput_tok_per_s"] > r["tok_per_s"] + 1e-9:
+            errors.append(f"{ctx}: goodput exceeds throughput")
+
+
+# ---------------------------------------------------------------------------
+# The table
+# ---------------------------------------------------------------------------
+SCHEMAS: dict[str, BenchSchema] = {
+    "kernels": BenchSchema(
+        name="kernels", filename="BENCH_kernels.json",
+        top_keys=("mode", "batch", "timings_note", "rows"),
+        row_fields=("name", "kind", "n_in", "n_out", "batch", "ref_us",
+                    "pallas_interpret_us", "max_rel_err",
+                    "timings_representative"),
+        diversity={"kind": 2},
+    ),
+    "serve": BenchSchema(
+        name="serve", filename="BENCH_serve.json",
+        top_keys=("workload", "note", "rows"),
+        row_fields=("family", "arch", "slots", "prefill_attention_backend",
+                    "recurrent_scan_backend", "wall_s", "tok_per_s",
+                    "goodput_tok_per_s", "ttft_slo_s", "n_slo_attained",
+                    "mean_first_token_s", "ttft_s", "inter_token_s",
+                    "queue_s", "tokens", "decode_ticks", "preempts",
+                    "cancels", "deadline_misses"),
+        pct_blocks=("ttft_s", "inter_token_s", "queue_s"),
+        diversity={"family": 3},
+    ),
+    "compressed_serve": BenchSchema(
+        name="compressed_serve", filename="BENCH_compressed_serve.json",
+        top_keys=("workload", "note", "rows"),
+        row_fields=("arch", "variant", "cr", "backends", "tokens", "wall_s",
+                    "tok_per_s", "mean_first_token_s", "ttft_s",
+                    "inter_token_s"),
+        pct_blocks=("ttft_s", "inter_token_s"),
+        diversity={"variant": 3, "arch": 2},
+    ),
+    "traffic": BenchSchema(
+        name="traffic", filename="BENCH_traffic.json",
+        top_keys=("scenarios", "note", "rows"),
+        row_fields=("family", "arch", "scenario", "workload", "n_requests",
+                    "n_completed", "n_cancelled", "n_deadline_missed",
+                    "wall_s", "tok_per_s", "goodput_tok_per_s", "ttft_s",
+                    "inter_token_s", "tokens", "decode_ticks", "preempts",
+                    "cancels", "deadline_misses"),
+        pct_blocks=("ttft_s", "inter_token_s"),
+        diversity={"family": 3, "scenario": 2},
+    ),
+}
+
+_INVARIANTS = {
+    "kernels": _invariants_kernels,
+    "serve": _invariants_serve,
+    "compressed_serve": _invariants_compressed,
+    "traffic": _invariants_traffic,
+}
+
+
+def check_report(name: str, rec: dict) -> list[str]:
+    """All schema errors for one parsed report (empty list == valid)."""
+    schema = SCHEMAS[name]
+    errors: list[str] = []
+    for key in schema.top_keys:
+        if key not in rec:
+            errors.append(f"{name}: missing top-level key {key!r}")
+    rows = _check_rows_common(schema, rec, errors)
+    if rows:
+        _INVARIANTS[name](rows, errors)
+    return errors
+
+
+def check_file(name: str, path: Path) -> list[str]:
+    path = Path(path)
+    if not path.exists():
+        return [f"{name}: report file {path} does not exist"]
+    try:
+        rec = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{name}: {path} is not valid JSON: {e}"]
+    return check_report(name, rec)
+
+
+def check_all(root: Path, report=print) -> list[str]:
+    """Validate every BENCH_*.json under ``root``; returns all errors."""
+    root = Path(root)
+    errors: list[str] = []
+    for name, schema in SCHEMAS.items():
+        errs = check_file(name, root / schema.filename)
+        if errs:
+            errors.extend(errs)
+            report(f"bench {name}: FAIL ({len(errs)} errors)")
+        else:
+            rec = json.loads((root / schema.filename).read_text())
+            report(f"bench {name}: OK ({len(rec['rows'])} rows)")
+    return errors

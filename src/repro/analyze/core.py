@@ -1,0 +1,244 @@
+"""Analyzer core: file index, findings schema, suppressions, baseline.
+
+The analyzer is a plain ``ast`` walk — no imports of the code under
+analysis, no jax tracing — so it runs in milliseconds and can lint a tree
+that would not even import (a half-registered kernel, a missing oracle).
+
+Two file populations:
+
+* **targets** — the files findings are reported on (CLI paths, default:
+  ``src``/``benchmarks``/``examples``/``tests`` under the repo root);
+* **anchors** — files some rules need for cross-file context even when
+  they are not targets (``kernels/dispatch.py`` for the role registry,
+  ``obs/trace.py`` for ``EVENT_FIELDS``).  Anchors never produce findings
+  unless they are also targets.
+
+Suppressions are inline comments on the offending line or the line above::
+
+    x = time.time()  # analyze: allow[wall-clock] informational stamp only
+
+The token inside ``[...]`` is a rule family (``wall-clock``), a finding
+code (``CLK001``), or ``*``.  Bulk grandfathering goes in the baseline
+file (``.analyze-baseline.json`` at the repo root): a list of
+``{"rule": ..., "path": ...}`` entries, ``path`` fnmatch-style, plus an
+optional ``"message"`` prefix — ``--strict`` fails only on findings not
+matched by either mechanism.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import json
+import re
+from pathlib import Path
+
+SKIP_DIRS = {"__pycache__", ".git", ".venv", "build", "dist", "node_modules",
+             "analyze_fixtures"}
+
+_ALLOW_RE = re.compile(r"#\s*analyze:\s*allow\[([A-Za-z0-9_*,\- ]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source location."""
+
+    rule: str      # finding code, e.g. "SYNC001"
+    family: str    # rule family, e.g. "host-sync" (the --rule / allow[] key)
+    path: str      # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+
+    def render(self, with_hint: bool = True) -> str:
+        out = f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+              f"[{self.family}] {self.message}"
+        if with_hint and self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class AnalyzeConfig:
+    """Knobs shared by every rule (CLI flags map onto these)."""
+
+    vmem_budget_bytes: int = 12 * 1024 * 1024  # matches kernels' own budget
+
+
+class SourceFile:
+    """One parsed python file: text, AST (with parent links), suppressions."""
+
+    def __init__(self, root: Path, path: Path):
+        self.abspath = path
+        try:
+            self.rel = path.relative_to(root).as_posix()
+        except ValueError:  # explicit path outside the root
+            self.rel = path.as_posix()
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.parse_error: SyntaxError | None = None
+        try:
+            self.tree: ast.Module | None = ast.parse(self.text)
+        except SyntaxError as e:
+            self.tree = None
+            self.parse_error = e
+        if self.tree is not None:
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    child._analyze_parent = node  # type: ignore[attr-defined]
+        # line -> set of allow tokens ("family", "CODE", or "*")
+        self.allow: dict[int, set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _ALLOW_RE.search(line)
+            if m:
+                toks = {t.strip() for t in m.group(1).split(",") if t.strip()}
+                self.allow[i] = toks
+
+    def allowed(self, line: int, rule: str, family: str) -> bool:
+        for ln in (line, line - 1):
+            toks = self.allow.get(ln)
+            if toks and ({rule, family, "*"} & toks):
+                return True
+        return False
+
+
+def parent(node: ast.AST) -> ast.AST | None:
+    return getattr(node, "_analyze_parent", None)
+
+
+def enclosing_function(node: ast.AST):
+    """Nearest enclosing FunctionDef/AsyncFunctionDef/Lambda, or None."""
+    cur = parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return cur
+        cur = parent(cur)
+    return None
+
+
+def dotted_name(node: ast.AST) -> str:
+    """'a.b.c' for nested Attribute/Name chains, '' when not a plain chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class RepoIndex:
+    """Parsed target + anchor files for one analysis run."""
+
+    # cross-file context some rules need even on single-file runs
+    ANCHOR_GLOBS = (
+        "src/repro/kernels/*.py",
+        "src/repro/obs/trace.py",
+    )
+
+    def __init__(self, root: Path, paths: list[Path]):
+        self.root = Path(root).resolve()
+        self.files: dict[str, SourceFile] = {}
+        self.anchors: dict[str, SourceFile] = {}
+        for p in paths:
+            for f in _walk(p):
+                sf = SourceFile(self.root, f)
+                self.files[sf.rel] = sf
+        for pattern in self.ANCHOR_GLOBS:
+            for f in sorted(self.root.glob(pattern)):
+                sf_rel = f.relative_to(self.root).as_posix()
+                if sf_rel not in self.files and f.is_file():
+                    self.anchors[sf_rel] = SourceFile(self.root, f)
+
+    def get(self, rel: str) -> SourceFile | None:
+        """Target if present, else anchor (cross-file context)."""
+        return self.files.get(rel) or self.anchors.get(rel)
+
+    def targets(self, pattern: str = "*") -> list[SourceFile]:
+        return [sf for rel, sf in sorted(self.files.items())
+                if fnmatch.fnmatch(rel, pattern)]
+
+    def context(self, pattern: str) -> list[SourceFile]:
+        """Targets *and* anchors matching a pattern (context reads)."""
+        seen = dict(self.anchors)
+        seen.update(self.files)
+        return [sf for rel, sf in sorted(seen.items())
+                if fnmatch.fnmatch(rel, pattern)]
+
+
+def _walk(path: Path):
+    path = Path(path)
+    if path.is_file():
+        if path.suffix == ".py":
+            yield path
+        return
+    for p in sorted(path.rglob("*.py")):
+        # skip dirs apply only *below* the requested path — an explicitly
+        # passed path inside e.g. analyze_fixtures/ is analyzed on purpose
+        if not any(part in SKIP_DIRS for part in p.relative_to(path).parts):
+            yield p
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+BASELINE_NAME = ".analyze-baseline.json"
+
+
+def load_baseline(path: Path) -> list[dict]:
+    if not path.exists():
+        return []
+    data = json.loads(path.read_text())
+    entries = data.get("findings", [])
+    for e in entries:
+        if "rule" not in e or "path" not in e:
+            raise ValueError(f"baseline entry needs 'rule' and 'path': {e}")
+    return entries
+
+
+def baselined(finding: Finding, entries: list[dict]) -> bool:
+    for e in entries:
+        if e["rule"] not in (finding.rule, finding.family, "*"):
+            continue
+        if not fnmatch.fnmatch(finding.path, e["path"]):
+            continue
+        if "message" in e and not finding.message.startswith(e["message"]):
+            continue
+        return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Run
+# ---------------------------------------------------------------------------
+def run_analysis(index: RepoIndex, rules, config: AnalyzeConfig | None = None):
+    """Run rule modules over the index.
+
+    Returns ``(findings, suppressed)``: inline-``allow[]``-suppressed
+    findings are split out (reported as counts, never failures).  Files
+    that fail to parse produce a synthetic ``PARSE000`` finding — a tree
+    the analyzer cannot read must fail loudly, not silently pass.
+    """
+    config = config or AnalyzeConfig()
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    for sf in index.files.values():
+        if sf.parse_error is not None:
+            findings.append(Finding(
+                "PARSE000", "parse", sf.rel,
+                sf.parse_error.lineno or 0, sf.parse_error.offset or 0,
+                f"syntax error: {sf.parse_error.msg}"))
+    for mod in rules:
+        for f in mod.check(index, config):
+            sf = index.files.get(f.path)
+            if sf is not None and sf.allowed(f.line, f.rule, mod.FAMILY):
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings, suppressed

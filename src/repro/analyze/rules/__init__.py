@@ -1,0 +1,28 @@
+"""Rule-family registry.
+
+Each module exposes ``FAMILY`` (the ``--rule`` / ``allow[]`` key),
+``CODES`` (finding code -> one-line description), and
+``check(index, config) -> Iterator[Finding]``.  Adding a family =
+adding a module here + listing it in ``ALL_RULES`` (DESIGN.md §13).
+"""
+from . import (  # noqa: F401
+    clock,
+    deprecated,
+    dispatch_registry,
+    host_sync,
+    jit_hygiene,
+    pallas_legality,
+    trace_schema,
+)
+
+ALL_RULES = (
+    dispatch_registry,
+    host_sync,
+    jit_hygiene,
+    pallas_legality,
+    clock,
+    trace_schema,
+    deprecated,
+)
+
+BY_FAMILY = {mod.FAMILY: mod for mod in ALL_RULES}

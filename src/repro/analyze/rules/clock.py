@@ -1,0 +1,41 @@
+"""wall-clock: ``time.time()`` is banned from duration math.
+
+Every latency/duration stamp in this repo is ``time.perf_counter()``
+(monotonic — a wall-clock step during a measurement corrupts a latency
+forever; DESIGN.md §9).  ``time.time()`` survives only at explicitly
+annotated informational wall-stamp sites (``Request.t_submit_wall``).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, dotted_name
+
+FAMILY = "wall-clock"
+CODES = {
+    "CLK001": "time.time() call (use time.perf_counter for durations)",
+}
+
+_HINT = ("use time.perf_counter() — monotonic, immune to wall-clock steps; "
+         "a purely informational wall stamp may stay with "
+         "`# analyze: allow[wall-clock] <reason>`")
+
+
+def check(index, config):
+    for sf in index.targets():
+        if sf.tree is None:
+            continue
+        from_time = {
+            a.asname or a.name
+            for node in ast.walk(sf.tree) if isinstance(node, ast.ImportFrom)
+            if node.module == "time"
+            for a in node.names if a.name == "time"
+        }
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name == "time.time" or (name and name in from_time):
+                yield Finding("CLK001", FAMILY, sf.rel, node.lineno,
+                              node.col_offset, "time.time() call in code "
+                              "that must use the monotonic clock", _HINT)

@@ -1,0 +1,55 @@
+"""deprecated-api: internal code must not use deprecated shims.
+
+``PagedEngine`` (the pre-unification engine alias) and ``get_model`` (the
+pre-``build_model`` constructor) survive only as ``DeprecationWarning``
+shims for external callers.  Internal code — src, benchmarks, examples —
+routes through ``serve.engine.Engine`` / ``models.api.build_model``; the
+tests that pin the deprecation warnings themselves carry inline allows.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding
+
+FAMILY = "deprecated-api"
+CODES = {
+    "DEP001": "use of a deprecated API (PagedEngine / get_model)",
+}
+
+# name -> (replacement, definition files where the shim itself lives)
+DEPRECATED = {
+    "PagedEngine": ("repro.serve.engine.Engine",
+                    ("src/repro/serve/engine.py",)),
+    "get_model": ("repro.models.api.build_model",
+                  ("src/repro/models/api.py",)),
+}
+
+
+def check(index, config):
+    for sf in index.targets():
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            hits = []  # (name, lineno, col)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # the shim's own definition
+            if isinstance(node, ast.Name) and node.id in DEPRECATED:
+                hits.append((node.id, node.lineno, node.col_offset))
+            elif isinstance(node, ast.Attribute) and node.attr in DEPRECATED:
+                hits.append((node.attr, node.lineno, node.col_offset))
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    if a.name in DEPRECATED:
+                        hits.append((a.name, node.lineno, node.col_offset))
+            for name, line, col in hits:
+                repl, def_files = DEPRECATED[name]
+                if sf.rel in def_files:
+                    continue  # definition site
+                yield Finding(
+                    "DEP001", FAMILY, sf.rel, line, col,
+                    f"deprecated API {name!r} (use {repl})",
+                    "internal code must not grow new uses of deprecated "
+                    "shims; a test pinning the DeprecationWarning itself "
+                    "may annotate `# analyze: allow[deprecated-api] ...`")

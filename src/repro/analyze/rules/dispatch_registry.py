@@ -1,0 +1,196 @@
+"""dispatch-registry: every kernel role must be *fully* registered.
+
+The serving stack's execution contract (DESIGN.md §2/§8/§10): a kernel
+role ships with all four legs or it does not ship —
+
+1. a pure-jnp **oracle** in ``kernels/ref.py`` (the parity gate),
+2. a **Pallas kernel** body (``*_pallas``),
+3. a **dispatch route** in ``kernels/dispatch.py`` resolving the backend
+   policy chain (``resolve_backend``),
+4. **obs wiring** (``_record_dispatch`` → per-(role, backend) counters).
+
+The registry below is the analyzer's source of truth; the rule
+cross-checks it against the actual tree so a new kernel (e.g. PR 11's
+prefix-cache / speculative roles) cannot land half-registered: a new
+dispatcher, kernel, or role string that the registry does not know is a
+finding telling the author exactly which legs are missing.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, dotted_name
+
+FAMILY = "dispatch-registry"
+CODES = {
+    "DISP001": "registered dispatcher missing from kernels/dispatch.py",
+    "DISP002": "dispatcher lacks obs wiring (_record_dispatch)",
+    "DISP003": "dispatcher bypasses the backend policy chain (resolve_backend)",
+    "DISP004": "registered oracle missing from kernels/ref.py",
+    "DISP005": "registered Pallas kernel function missing under kernels/",
+    "DISP006": "Pallas kernel (*_pallas) not routed through dispatch",
+    "DISP007": "dispatcher not present in the analyzer registry",
+    "DISP008": "unknown kernel role string at a dispatch call site",
+}
+
+DISPATCH_PATH = "src/repro/kernels/dispatch.py"
+REF_PATH = "src/repro/kernels/ref.py"
+KERNELS_GLOB = "src/repro/kernels/*.py"
+
+# dispatcher function -> legs.  ``oracles`` are names that must exist in
+# kernels/ref.py; ``kernel`` must be a top-level def under kernels/.
+# ``xla_native`` dispatchers have no Pallas body on purpose (XLA's own
+# matmul saturates the MXU) and skip the policy chain.
+REGISTRY: dict[str, dict] = {
+    "dense_linear": {"oracles": (), "kernel": None, "xla_native": True},
+    "tt_linear": {"oracles": ("tt_linear_bn_res",),
+                  "kernel": "tt_linear_pallas"},
+    "tt_embed": {"oracles": ("tt_embedding",), "kernel": "tt_embed_pallas"},
+    "int4_matmul": {"oracles": ("int4_matmul",),
+                    "kernel": "int4_matmul_pallas"},
+    "paged_attention": {"oracles": ("paged_attention",),
+                        "kernel": "paged_attention_pallas"},
+    "prefill_attention": {"oracles": ("paged_attention", "ring_attention"),
+                          "kernel": "prefill_attention_pallas"},
+    "rglru_scan": {"oracles": ("rglru_scan",), "kernel": "rglru_scan_pallas"},
+    "wkv_scan": {"oracles": ("wkv_scan",), "kernel": "wkv_scan_pallas"},
+}
+
+# The role namespace is two-tier: *layer* roles (``LinearSpec.role`` —
+# "attn_q", "mlp_up", ... an open set flowing through the linear
+# dispatchers and ``resolve_backend`` for per-role env overrides) and
+# *kernel-op* roles (the fixed per-op vocabulary below).  Only the latter
+# is closed, so only calls to the closed-vocabulary dispatchers are
+# checked for typos.
+KNOWN_ROLES = {
+    "attn_paged", "attn_prefill", "rglru_scan", "wkv_scan",
+    "embed_lookup", "unembed",
+}
+
+_ROLE_CALL_TARGETS = {"paged_attention", "prefill_attention",
+                      "rglru_scan", "wkv_scan", "tt_embed"}
+
+_REG_HINT = ("register the role in repro/analyze/rules/dispatch_registry.py "
+             "with its oracle + kernel legs — the registry is how the "
+             "analyzer knows a kernel ships complete")
+
+
+def _top_defs(sf) -> set[str]:
+    if sf is None or sf.tree is None:
+        return set()
+    return {n.name for n in sf.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _fn_calls(fn) -> set[str]:
+    return {dotted_name(n.func) for n in ast.walk(fn)
+            if isinstance(n, ast.Call)}
+
+
+def check(index, config):
+    dispatch = index.get(DISPATCH_PATH)
+    ref = index.get(REF_PATH)
+
+    # registry legs — only checkable when the anchor files parse
+    if dispatch is not None and dispatch.tree is not None:
+        yield from _check_registry(index, dispatch, ref)
+
+    # DISP008: unknown role strings anywhere in the analyzed targets
+    for sf in index.targets():
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            short = callee.rsplit(".", 1)[-1]
+            if short not in _ROLE_CALL_TARGETS:
+                continue
+            for kw in node.keywords:
+                if kw.arg == "role" and isinstance(kw.value, ast.Constant) \
+                        and isinstance(kw.value.value, str) \
+                        and kw.value.value not in KNOWN_ROLES:
+                    yield Finding(
+                        "DISP008", FAMILY, sf.rel, kw.value.lineno,
+                        kw.value.col_offset,
+                        f"unknown kernel role {kw.value.value!r} passed to "
+                        f"{short}()", _REG_HINT)
+
+
+def _check_registry(index, dispatch, ref):
+    ref_defs = _top_defs(ref)
+    kernel_defs: dict[str, str] = {}  # def name -> rel path
+    for sf in index.context(KERNELS_GLOB):
+        for name in _top_defs(sf):
+            kernel_defs.setdefault(name, sf.rel)
+
+    dispatchers = {n.name: n for n in dispatch.tree.body
+                   if isinstance(n, ast.FunctionDef)
+                   and not n.name.startswith("_")}
+
+    for name, legs in REGISTRY.items():
+        fn = dispatchers.get(name)
+        if fn is None:
+            yield Finding(
+                "DISP001", FAMILY, dispatch.rel, 1, 0,
+                f"registered dispatcher {name}() not defined in "
+                f"kernels/dispatch.py",
+                "every kernel role needs a dispatch route (DESIGN.md §2)")
+            continue
+        calls = _fn_calls(fn)
+        if "_record_dispatch" not in {c.rsplit(".", 1)[-1] for c in calls}:
+            yield Finding(
+                "DISP002", FAMILY, dispatch.rel, fn.lineno, fn.col_offset,
+                f"dispatcher {name}() never calls _record_dispatch()",
+                "obs counter wiring is part of the role contract — "
+                "benchmarks report the backend that actually traced "
+                "(DESIGN.md §9)")
+        if not legs.get("xla_native") and "resolve_backend" not in {
+                c.rsplit(".", 1)[-1] for c in calls}:
+            yield Finding(
+                "DISP003", FAMILY, dispatch.rel, fn.lineno, fn.col_offset,
+                f"dispatcher {name}() never calls resolve_backend()",
+                "backends resolve through one policy chain "
+                "(explicit > override > env > config > auto)")
+        for oracle in legs["oracles"]:
+            if oracle not in ref_defs:
+                yield Finding(
+                    "DISP004", FAMILY, dispatch.rel, fn.lineno, fn.col_offset,
+                    f"oracle ref.{oracle}() for dispatcher {name}() not "
+                    f"defined in kernels/ref.py",
+                    "every kernel is parity-gated against a pure-jnp oracle")
+        kern = legs.get("kernel")
+        if kern and kern not in kernel_defs:
+            yield Finding(
+                "DISP005", FAMILY, dispatch.rel, fn.lineno, fn.col_offset,
+                f"Pallas kernel {kern}() for dispatcher {name}() not "
+                f"defined under src/repro/kernels/",
+                "the kernel leg is missing — ship the Pallas body or mark "
+                "the dispatcher xla_native in the registry")
+
+    # DISP007: a dispatcher with obs wiring the registry does not know
+    for name, fn in dispatchers.items():
+        if name in REGISTRY:
+            continue
+        if "_record_dispatch" in {c.rsplit(".", 1)[-1] for c in _fn_calls(fn)}:
+            yield Finding(
+                "DISP007", FAMILY, dispatch.rel, fn.lineno, fn.col_offset,
+                f"dispatcher {name}() is not in the analyzer registry",
+                _REG_HINT)
+
+    # DISP006: *_pallas kernels nobody routes
+    dispatch_text = dispatch.text
+    for name, rel in sorted(kernel_defs.items()):
+        if not name.endswith("_pallas") or rel == dispatch.rel:
+            continue
+        if name not in dispatch_text:
+            sf = index.get(rel)
+            line = next((n.lineno for n in sf.tree.body
+                         if isinstance(n, ast.FunctionDef)
+                         and n.name == name), 1)
+            yield Finding(
+                "DISP006", FAMILY, rel, line, 0,
+                f"Pallas kernel {name}() is never referenced from "
+                f"kernels/dispatch.py",
+                "kernels ship behind a dispatch role (ref | "
+                "pallas-interpret | pallas), never called directly")

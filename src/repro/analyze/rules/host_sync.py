@@ -1,0 +1,104 @@
+"""host-sync: no un-annotated device syncs in the decode hot loop.
+
+PR 6's overhead contract: the serving hot path (decode tick phases, the
+async pump, the chunked-prefill driver, model decode bodies) adds **no**
+device syncs beyond the acknowledged ones.  Until now one monkeypatch test
+enforced this for one call site; this rule makes every sync-shaped call in
+a hot region a finding unless it carries an inline
+``# analyze: allow[host-sync] <why this sync is acknowledged>``.
+
+Flagged in hot regions:
+
+* ``jax.block_until_ready(...)`` / bare ``block_until_ready(...)``
+* ``<expr>.item()``
+* ``np.asarray(...)`` / ``np.array(...)`` / ``jax.device_get(...)`` —
+  pulling a device array to host blocks on it
+* ``float(...)`` / ``int(...)`` whose argument contains a ``jnp.*`` /
+  ``jax.*`` call (coercing a device value forces a transfer)
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import re
+
+from ..core import Finding, dotted_name, enclosing_function
+
+FAMILY = "host-sync"
+CODES = {
+    "SYNC001": "host-device sync in a decode hot-path region",
+}
+
+# (path glob, function-name regex) pairs marking hot regions
+HOT_REGIONS = (
+    ("src/repro/serve/engine.py",
+     r"^(_decode_schedule|_decode_dispatch|_decode_collect|_plan_ahead"
+     r"|_finish_tick|_sample|_emit)$"),
+    ("src/repro/serve/frontend.py", r"^(_pump|_deliver|_apply_cancels)$"),
+    ("src/repro/serve/steps.py",
+     r"^(chunked_prefill|session_step_fns|greedy_tokens|_greedy_tokens)$"),
+    # model decode bodies, wherever they live (sessions, families, fixtures)
+    ("*.py", r"^(decode_step\w*|_decode\w*)$"),
+)
+
+_SYNC_CALLS = {"jax.block_until_ready", "block_until_ready",
+               "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+               "jax.device_get"}
+_HINT = ("the decode loop must stay async — dispatch returns while the "
+         "device computes; an acknowledged sync needs "
+         "`# analyze: allow[host-sync] <reason>` on its line")
+
+
+def _hot_functions(sf):
+    """FunctionDefs in ``sf`` whose (file, name) matches a hot region."""
+    out = []
+    if sf.tree is None:
+        return out
+    pats = [re.compile(rx) for glob, rx in HOT_REGIONS
+            if fnmatch.fnmatch(sf.rel, glob)]
+    if not pats:
+        return out
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                any(p.match(node.name) for p in pats):
+            out.append(node)
+    return out
+
+
+def _device_coercion(call: ast.Call) -> bool:
+    """float(x)/int(x) where x contains a jnp./jax. call."""
+    if not (isinstance(call.func, ast.Name) and call.func.id in ("float", "int")):
+        return False
+    for arg in call.args:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Call):
+                name = dotted_name(sub.func)
+                if name.startswith(("jnp.", "jax.")):
+                    return True
+    return False
+
+
+def check(index, config):
+    for sf in index.targets():
+        for fn in _hot_functions(sf):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                # a nested def inside a hot fn is still hot; a hot fn found
+                # by the wildcard pattern inside a non-hot one is handled by
+                # its own entry in _hot_functions, so no double-reporting
+                if enclosing_function(node) is None:
+                    continue
+                name = dotted_name(node.func)
+                msg = None
+                if name in _SYNC_CALLS:
+                    msg = f"{name}() in hot-path function {fn.name}()"
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    msg = f".item() in hot-path function {fn.name}()"
+                elif _device_coercion(node):
+                    msg = (f"{node.func.id}() over a device value in "
+                           f"hot-path function {fn.name}()")
+                if msg:
+                    yield Finding("SYNC001", FAMILY, sf.rel, node.lineno,
+                                  node.col_offset, msg, _HINT)

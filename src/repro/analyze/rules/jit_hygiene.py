@@ -1,0 +1,207 @@
+"""jit-hygiene: jit cache keys must cover everything a program bakes in.
+
+Three bug shapes this repo has to guard against (DESIGN.md §13):
+
+* **JIT001** — a jitted closure stored in a module-level memo/cache
+  captures an enclosing-scope variable that is *not* part of the cache
+  key: two calls with different values silently share one trace
+  (``serve.steps.session_step_fns`` is the load-bearing example — its
+  closures bind ``session``/``kernel_backend`` via default args and the
+  key carries both).
+* **JIT002** — ``static_argnums``/``static_argnames`` naming a parameter
+  with a mutable (unhashable) default: the first call with the default
+  raises ``TypeError: unhashable`` at dispatch time.
+* **JIT003** — a module-level ``@jax.jit`` function reading module-level
+  mutable state (list/dict/set): the trace bakes in the first value and
+  never sees mutations.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, dotted_name, enclosing_function, parent
+
+FAMILY = "jit-hygiene"
+CODES = {
+    "JIT001": "jitted closure in a module-level cache captures a variable "
+              "missing from the cache key",
+    "JIT002": "static_argnums/static_argnames over a parameter with an "
+              "unhashable default",
+    "JIT003": "module-level jitted function closes over mutable module state",
+}
+
+_MUTABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+            ast.SetComp)
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    return dotted_name(node.func) in ("jax.jit", "jit")
+
+
+def _names_loaded(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _local_bindings(fn) -> set[str]:
+    """Parameter names + default-arg bindings + local stores of ``fn``."""
+    args = fn.args
+    bound = {a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)}
+    if args.vararg:
+        bound.add(args.vararg.arg)
+    if args.kwarg:
+        bound.add(args.kwarg.arg)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                bound.add(n.id)
+            elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                bound.add(n.name)
+    return bound
+
+
+def _captured_from(fn, outer) -> set[str]:
+    """Names ``fn`` reads that are bound in enclosing function ``outer``."""
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    loaded = set()
+    for stmt in body:
+        loaded |= _names_loaded(stmt)
+    return (loaded - _local_bindings(fn)) & _local_bindings(outer)
+
+
+def _module_mutables(tree: ast.Module) -> set[str]:
+    out = set()
+    for stmt in tree.body:
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets, value = stmt.targets, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            targets, value = [stmt.target], stmt.value
+        else:
+            continue
+        if isinstance(value, _MUTABLE) or (
+                isinstance(value, ast.Call) and
+                dotted_name(value.func) in ("dict", "list", "set")):
+            for t in targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _resolve_local_def(name: str, scope) -> ast.AST | None:
+    for n in ast.walk(scope):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                n.name == name:
+            return n
+    return None
+
+
+def _cache_store_key(node: ast.Call):
+    """If ``node``'s value flows into ``CACHE[key] = ...`` (directly or via a
+    container literal), return the key expression, else None."""
+    cur: ast.AST = node
+    p = parent(cur)
+    while isinstance(p, (ast.Tuple, ast.List, ast.Dict)):
+        cur, p = p, parent(p)
+    if isinstance(p, ast.Assign) and len(p.targets) == 1 and \
+            isinstance(p.targets[0], ast.Subscript):
+        return p.targets[0].slice
+    return None
+
+
+def _key_names(key_expr: ast.AST, outer) -> set[str]:
+    """Names reachable from the cache-key expression (one level of local
+    assignment indirection: ``key = (...); CACHE[key] = ...``)."""
+    names = _names_loaded(key_expr)
+    if isinstance(key_expr, ast.Name):
+        for stmt in ast.walk(outer):
+            if isinstance(stmt, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == key_expr.id
+                    for t in stmt.targets):
+                names |= _names_loaded(stmt.value)
+    return names
+
+
+def check(index, config):
+    for sf in index.targets():
+        if sf.tree is None:
+            continue
+        mod_mutables = _module_mutables(sf.tree)
+        for node in ast.walk(sf.tree):
+            # --- call form: jax.jit(f, ...) --------------------------------
+            if isinstance(node, ast.Call) and _is_jit_call(node) and node.args:
+                fn_arg = node.args[0]
+                outer = enclosing_function(node)
+                target = None
+                if isinstance(fn_arg, ast.Lambda):
+                    target = fn_arg
+                elif isinstance(fn_arg, ast.Name) and outer is not None:
+                    target = _resolve_local_def(fn_arg.id, outer)
+                # JIT001: only when the jitted program lands in a cache
+                key_expr = _cache_store_key(node)
+                if target is not None and outer is not None and \
+                        key_expr is not None:
+                    captured = _captured_from(target, outer)
+                    missing = captured - _key_names(key_expr, outer)
+                    for name in sorted(missing):
+                        yield Finding(
+                            "JIT001", FAMILY, sf.rel, node.lineno,
+                            node.col_offset,
+                            f"jitted closure captures {name!r} from the "
+                            f"enclosing scope but the cache key does not "
+                            f"include it",
+                            f"bind it via a default arg (`_x={name}`) and/or "
+                            f"add it to the memo key — otherwise two "
+                            f"configurations share one trace")
+                # JIT002: unhashable static-arg defaults
+                yield from _check_static_args(sf, node, target)
+            # --- decorator form: @jax.jit on a module-level def ------------
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                jit_deco = any(
+                    (isinstance(d, ast.Call) and _is_jit_call(d)) or
+                    dotted_name(d) in ("jax.jit", "jit")
+                    for d in node.decorator_list)
+                if jit_deco and isinstance(parent(node), ast.Module):
+                    reads = _names_loaded(node) & mod_mutables
+                    for name in sorted(reads - _local_bindings(node)):
+                        yield Finding(
+                            "JIT003", FAMILY, sf.rel, node.lineno,
+                            node.col_offset,
+                            f"@jax.jit function {node.name}() reads mutable "
+                            f"module state {name!r}",
+                            "the trace bakes in the value at first call and "
+                            "never sees mutations; pass it as an argument "
+                            "or make it an immutable constant")
+
+
+def _check_static_args(sf, node: ast.Call, target):
+    static_names: set[str] = set()
+    static_nums: set[int] = set()
+    for kw in node.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+                    static_names.add(sub.value)
+        elif kw.arg == "static_argnums":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value, int):
+                    static_nums.add(sub.value)
+    if target is None or not isinstance(target, (ast.FunctionDef,
+                                                 ast.AsyncFunctionDef)):
+        return
+    args = target.args.posonlyargs + target.args.args
+    defaults = target.args.defaults
+    # defaults align with the tail of the positional parameter list
+    offset = len(args) - len(defaults)
+    for i, a in enumerate(args):
+        if a.arg not in static_names and i not in static_nums:
+            continue
+        d = defaults[i - offset] if i >= offset else None
+        if d is not None and isinstance(d, _MUTABLE):
+            yield Finding(
+                "JIT002", FAMILY, sf.rel, node.lineno, node.col_offset,
+                f"static argument {a.arg!r} has an unhashable default",
+                "static args are hashed into the jit cache key; a "
+                "list/dict/set default raises TypeError at dispatch")

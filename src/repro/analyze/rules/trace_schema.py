@@ -1,0 +1,108 @@
+"""trace-schema: obs emit sites must match ``EVENT_FIELDS``.
+
+``obs/trace.py``'s ``EVENT_FIELDS`` table is the single source of truth
+for the scheduler trace schema — ``obs.export`` validates persisted JSONL
+against it and the ordering-invariant tests replay it.  An emit site that
+invents an event name or field silently produces records the exporter
+rejects *later*, far from the bug.  This rule reads the table straight out
+of the anchor file's AST (no import) and checks every
+``<obs>.event("name", ...)`` / ``<trace>.emit("name", ...)`` call with a
+literal event name:
+
+* **TRACE001** — unknown event type;
+* **TRACE002** — keyword not declared for that event (``t`` is part of the
+  common envelope and always allowed);
+* **TRACE003** — declared field missing at the call site (only when the
+  call has no ``**kwargs`` expansion that could supply it).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..core import Finding, dotted_name
+
+FAMILY = "trace-schema"
+CODES = {
+    "TRACE001": "emit of an event type not declared in EVENT_FIELDS",
+    "TRACE002": "emit passes a field not declared for the event type",
+    "TRACE003": "emit omits a field EVENT_FIELDS declares for the event",
+}
+
+TRACE_PATH = "src/repro/obs/trace.py"
+
+# receiver suffixes that mark a call as a scheduler-trace emit (plain
+# ``.emit()`` on unrelated objects is out of scope)
+_RECEIVERS = ("obs", "trace", "_trace", "tracer", "observer")
+
+
+def _event_fields(index) -> dict[str, tuple[str, ...]] | None:
+    sf = index.get(TRACE_PATH)
+    if sf is None or sf.tree is None:
+        return None
+    for node in sf.tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            if any(isinstance(t, ast.Name) and t.id == "EVENT_FIELDS"
+                   for t in targets) and node.value is not None:
+                try:
+                    val = ast.literal_eval(node.value)
+                except (ValueError, SyntaxError):
+                    return None
+                if isinstance(val, dict):
+                    return {k: tuple(v) for k, v in val.items()}
+    return None
+
+
+def _is_emit_site(node: ast.Call) -> str | None:
+    """Literal event name when ``node`` is a trace-emit call, else None."""
+    if not (isinstance(node.func, ast.Attribute) and
+            node.func.attr in ("event", "emit")):
+        return None
+    recv = dotted_name(node.func.value)
+    if not recv or recv.rsplit(".", 1)[-1] not in _RECEIVERS:
+        return None
+    if node.args and isinstance(node.args[0], ast.Constant) and \
+            isinstance(node.args[0].value, str):
+        return node.args[0].value
+    return None
+
+
+def check(index, config):
+    fields_by_event = _event_fields(index)
+    if fields_by_event is None:
+        return  # no anchor (fixture run outside the repo) — nothing to check
+    for sf in index.targets():
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            ev = _is_emit_site(node)
+            if ev is None:
+                continue
+            declared = fields_by_event.get(ev)
+            if declared is None:
+                yield Finding(
+                    "TRACE001", FAMILY, sf.rel, node.lineno, node.col_offset,
+                    f"event type {ev!r} is not declared in "
+                    f"obs.trace.EVENT_FIELDS",
+                    "add the event + its field tuple to EVENT_FIELDS first — "
+                    "the exporter and replay tests only know declared events")
+                continue
+            has_star = any(kw.arg is None for kw in node.keywords)
+            passed = {kw.arg for kw in node.keywords if kw.arg is not None}
+            for name in sorted(passed - set(declared) - {"t"}):
+                yield Finding(
+                    "TRACE002", FAMILY, sf.rel, node.lineno, node.col_offset,
+                    f"field {name!r} is not declared for event {ev!r}",
+                    f"declared fields: {', '.join(declared)} — extend "
+                    f"EVENT_FIELDS if the event really grew a field")
+            if not has_star:
+                for name in sorted(set(declared) - passed):
+                    yield Finding(
+                        "TRACE003", FAMILY, sf.rel, node.lineno,
+                        node.col_offset,
+                        f"event {ev!r} omits declared field {name!r}",
+                        "EVENT_FIELDS fields are required — the exporter "
+                        "rejects records missing them")

@@ -114,7 +114,8 @@ def tt_linear_pallas(x: jax.Array, cores: list[jax.Array], spec: TTSpec, *,
     nb = x.shape[0] // bb
 
     in_specs = [pl.BlockSpec((bb, spec.n_in), lambda i: (i, 0))]
-    in_specs += [pl.BlockSpec(c.shape, lambda i: tuple([0] * c.ndim)) for c in cores]
+    in_specs += [pl.BlockSpec(c.shape, lambda i, _nd=c.ndim: (0,) * _nd)
+                 for c in cores]
     extra = []
     for vec in (scale, bias):
         if vec is not None:

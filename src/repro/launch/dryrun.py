@@ -217,9 +217,9 @@ def lower_cell(arch: str, cell: ShapeCell, mesh, *, baseline: bool = False,
             lowered = jitted.lower(pshapes, cshapes, batch,
                                    jax.ShapeDtypeStruct((), jnp.int32))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
     return cfg, lowered, compiled, compile_s
 
 
@@ -263,14 +263,14 @@ def run_cell(arch: str, cell_name: str, multi_pod: bool, out_dir: Path,
         print(f"[dryrun] SKIP {arch} × {cell_name} × {mesh_name}: {skip}")
     else:
         mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
-        t0 = time.time()
+        t0 = time.perf_counter()
         cfg, lowered, compiled, compile_s = lower_cell(arch, cell, mesh,
                                                        baseline=baseline,
                                                        reduced=reduced)
         rec.update(analyze(lowered, compiled, mesh))
         rec["microbatches"] = 4 if (cell.kind == "train" and arch in BIG_TRAIN) else 1
         rec["compile_s"] = compile_s
-        rec["total_s"] = time.time() - t0
+        rec["total_s"] = time.perf_counter() - t0
         mem = rec["memory"]
         print(f"[dryrun] OK {arch} × {cell_name} × {mesh_name}"
               f"{' [baseline]' if baseline else ''}: "

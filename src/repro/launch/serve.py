@@ -46,9 +46,9 @@ def main(argv=None):
     for i in range(args.requests):
         engine.submit([1 + i, 2, 3] + list(range(4, 4 + i % 5)),
                       max_tokens=args.max_tokens)
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = engine.run()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s)")

@@ -1,4 +1,4 @@
-from .api import Model, build_model, get_model  # noqa: F401
+from .api import Model, build_model, get_model  # noqa: F401  # analyze: allow[deprecated-api] public shim re-export
 from .sessions import (  # noqa: F401
     FAMILY_BACKENDS,
     InferenceSession,

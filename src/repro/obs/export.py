@@ -43,7 +43,7 @@ class JsonlWriter:
     def write(self, rec: dict) -> None:
         if self._fh is None:
             self.path.parent.mkdir(parents=True, exist_ok=True)
-            self._fh = open(self.path, "a", buffering=1)
+            self._fh = open(self.path, "a", buffering=1)  # noqa: SIM115  long-lived handle, closed in close()
             atexit.register(self.close)
         self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
 

@@ -1,4 +1,4 @@
-from .engine import (  # noqa: F401
+from .engine import (  # noqa: F401  # analyze: allow[deprecated-api] public shim re-export
     AdmissionPolicy,
     EDFAdmission,
     Engine,

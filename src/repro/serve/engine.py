@@ -268,7 +268,9 @@ class Engine:
                     f"has {self.manager.num_blocks - 1}")
         req = Request(self._next_rid, list(prompt), max_tokens, eos,
                       enc_frames=enc_frames, deadline_s=deadline_s,
-                      t_submit=time.perf_counter(), t_submit_wall=time.time())
+                      t_submit=time.perf_counter(),
+                      # analyze: allow[wall-clock] informational submit stamp; never enters duration math
+                      t_submit_wall=time.time())
         self._next_rid += 1
         self._any_deadline |= deadline_s is not None
         self.queue.append(req)
@@ -405,6 +407,7 @@ class Engine:
     def _sample(self, logits) -> int:
         """Greedy argmax, or seeded temperature/top-k sampling."""
         if self.greedy:
+            # analyze: allow[host-sync] legacy per-token path; the batched tick samples on-device
             return int(jnp.argmax(logits))
         self._key, sub = jax.random.split(self._key)
         scaled = logits.astype(jnp.float32) / max(self.temperature, 1e-6)
@@ -412,6 +415,7 @@ class Engine:
             k = min(self.top_k, scaled.shape[-1])
             kth = jax.lax.top_k(scaled, k)[0][-1]
             scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        # analyze: allow[host-sync] seeded sampling emits one host token by contract
         return int(jax.random.categorical(sub, scaled))
 
     def _emit(self, req: Request, tok: int) -> bool:

@@ -215,6 +215,7 @@ class AsyncEngine:
                     logits2 = eng._decode_dispatch(plan2, device_toks=toks_dev)
                     self.stats["ahead_ticks"] += 1
                     # pull tick N's tokens to host while tick N+1 computes
+                    # analyze: allow[host-sync] the acknowledged sync: overlapped with the in-flight tick
                     toks_host = np.asarray(toks_dev)[:, 0]
                     eng._decode_collect(plan, logits, toks_host=toks_host)
                     in_flight = (plan2, logits2)

@@ -75,18 +75,21 @@ def session_step_fns(session: InferenceSession, kernel_backend: str | None = Non
     if key not in _STEP_CACHE:
         while len(_STEP_CACHE) >= 64:  # bounded like the old lru_cache
             _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
-        def _prefill(params, state, tokens, positions, _s=session):
-            with backend_override(kernel_backend):
+        def _prefill(params, state, tokens, positions, _s=session,
+                     _kb=kernel_backend):
+            with backend_override(_kb):
                 return _s.prefill_chunk(params, state, tokens, positions)
 
-        def _decode(params, state, tokens, positions, _s=session):
-            with backend_override(kernel_backend):
+        def _decode(params, state, tokens, positions, _s=session,
+                    _kb=kernel_backend):
+            with backend_override(_kb):
                 return _s.decode_step(params, state, tokens, positions)
 
         begin = None
         if session.needs_encoder_ctx:
-            def begin(params, state, slot, enc_frames, _s=session):
-                with backend_override(kernel_backend):
+            def begin(params, state, slot, enc_frames, _s=session,
+                      _kb=kernel_backend):
+                with backend_override(_kb):
                     return _s.begin_sequence(params, state, slot, enc_frames)
             begin = jax.jit(begin)
         _STEP_CACHE[key] = (jax.jit(_prefill), jax.jit(_decode), begin)

@@ -119,34 +119,14 @@ def traffic_row(*, result, registry, **labels) -> dict:
 
 
 def check_traffic_schema(rec: dict) -> None:
-    """Assert a BENCH_traffic.json record has the acceptance shape."""
-    for key in ("scenarios", "note", "rows"):
-        assert key in rec, f"missing top-level key {key!r}"
-    rows = rec["rows"]
-    assert rows, "no rows"
-    assert len({r["family"] for r in rows}) >= 3, "need >= 3 model families"
-    assert len({r["scenario"] for r in rows}) >= 2, \
-        "need >= 2 arrival scenarios"
-    for r in rows:
-        ctx = f"row {r.get('family')}/{r.get('scenario')}"
-        for key in ("family", "arch", "scenario", "workload", "n_requests",
-                    "n_completed", "n_cancelled", "n_deadline_missed",
-                    "wall_s", "tok_per_s", "goodput_tok_per_s", "ttft_s",
-                    "inter_token_s", "tokens", "decode_ticks", "preempts",
-                    "cancels", "deadline_misses"):
-            assert key in r, f"{ctx}: missing {key!r}"
-        for block in ("ttft_s", "inter_token_s"):
-            for f in PCT_FIELDS:
-                assert f in r[block], f"{ctx}: {block} missing {f!r}"
-            assert r[block]["count"] > 0, f"{ctx}: empty {block} histogram"
-            for f in ("p50", "p95", "p99"):
-                assert r[block][f] is not None and r[block][f] > 0, \
-                    f"{ctx}: {block}.{f}"
-        assert float(r["wall_s"]) > 0, f"{ctx}: wall_s"
-        assert float(r["goodput_tok_per_s"]) <= float(r["tok_per_s"]) + 1e-9, \
-            f"{ctx}: goodput exceeds throughput"
-        assert r["n_completed"] + r["n_cancelled"] + r["n_deadline_missed"] \
-            == r["n_requests"], f"{ctx}: outcome counts do not partition"
-        # obs-registry cancels cover both client cancels and deadline expiry
-        assert r["cancels"] == r["n_cancelled"] + r["n_deadline_missed"], \
-            f"{ctx}: registry cancel count disagrees with outcomes"
+    """Assert a BENCH_traffic.json record has the acceptance shape.
+
+    Thin wrapper over the shared BENCH schema table
+    (``repro.analyze.bench``) so the traffic report is validated by the
+    same code as ``python -m repro.analyze --bench``; kept here for the
+    public ``repro.traffic`` API surface.
+    """
+    from repro.analyze.bench import check_report
+
+    errors = check_report("traffic", rec)
+    assert not errors, "; ".join(errors)

@@ -1,0 +1,8 @@
+"""Fixture: wall-clock in duration math (CLK001)."""
+import time
+
+
+def run(step):
+    t0 = time.time()
+    step()
+    return time.time() - t0

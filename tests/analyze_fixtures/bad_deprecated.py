@@ -1,0 +1,6 @@
+"""Fixture: internal use of deprecated shims (DEP001)."""
+from repro.serve import PagedEngine
+
+
+def make_engine(model, params):
+    return PagedEngine(model, params, slots=2, max_len=32)

@@ -1,0 +1,21 @@
+"""Fixture dispatch.py: a half-registered kernel zoo (DISP00x findings)."""
+
+
+def _record_dispatch(role, backend, out, t0):
+    return out
+
+
+def resolve_backend(explicit=None, *, role=""):
+    return explicit or "ref"
+
+
+def tt_linear(x, cores, spec, backend=None, role="tt"):
+    # no resolve_backend (DISP003), no _record_dispatch (DISP002), and the
+    # oracle/kernel legs are missing from this tree (DISP004/DISP005)
+    return x
+
+
+def mystery_op(x, backend=None):
+    # obs-wired dispatcher the registry does not know (DISP007)
+    backend = resolve_backend(backend)
+    return _record_dispatch("mystery", backend, x, 0)

@@ -1,0 +1,10 @@
+"""Fixture: a Pallas kernel nobody routes + a role typo."""
+from .dispatch import paged_attention  # noqa: F401
+
+
+def orphan_pallas(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def use(x):
+    return paged_attention(x, role="attn_pagedd")

@@ -1,0 +1,12 @@
+"""Fixture: un-annotated device syncs in a model decode body (SYNC001)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_step(params, cache, tokens):
+    logits = jnp.dot(tokens, params)
+    jax.block_until_ready(logits)
+    tok = float(jnp.argmax(logits))
+    host = np.asarray(logits)
+    return host, tok, logits[0].item()

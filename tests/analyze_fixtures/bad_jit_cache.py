@@ -1,0 +1,13 @@
+"""Fixture: jitted closure capture missing from the memo key (JIT001)."""
+import jax
+
+_CACHE = {}
+
+
+def step_fns(session, backend):
+    key = (session.step_key,)
+    if key not in _CACHE:
+        def _decode(x, _s=session):
+            return _s.decode(x, backend)
+        _CACHE[key] = jax.jit(_decode)
+    return _CACHE[key]

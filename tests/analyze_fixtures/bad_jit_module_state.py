@@ -1,0 +1,9 @@
+"""Fixture: module-level @jax.jit reading mutable module state (JIT003)."""
+import jax
+
+_SCALE = {"value": 2.0}
+
+
+@jax.jit
+def scaled(x):
+    return x * _SCALE["value"]

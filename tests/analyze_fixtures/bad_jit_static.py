@@ -1,0 +1,8 @@
+"""Fixture: static arg with an unhashable default (JIT002)."""
+import jax
+
+
+def build():
+    def _f(x, opts={"beam": 1}):
+        return x * opts["beam"]
+    return jax.jit(_f, static_argnames=("opts",))

@@ -1,0 +1,17 @@
+"""Fixture: BlockSpec index-map arity != grid rank (PAL002)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def tile(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32))(x)

@@ -1,0 +1,17 @@
+"""Fixture: literal block shape does not divide out_shape (PAL005)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def ragged(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((100,), jnp.float32))(x)

@@ -1,0 +1,20 @@
+"""Fixture: Python-side effects inside a kernel body (PAL003)."""
+import random
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    print("tracing", x_ref.shape)
+    o_ref[...] = x_ref[...] * random.random()
+
+
+def noisy(x):
+    return pl.pallas_call(
+        _k,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0,))],
+        out_specs=pl.BlockSpec(x.shape, lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32))(x)

@@ -1,0 +1,13 @@
+"""Fixture: pallas_call without an explicit grid (PAL001)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def double(x):
+    return pl.pallas_call(
+        _k, out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32))(x)

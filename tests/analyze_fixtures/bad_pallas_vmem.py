@@ -1,0 +1,21 @@
+"""Fixture: statically-sized tile footprint over the VMEM budget (PAL004)."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 2048
+
+
+def _k(x_ref, w_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...]
+
+
+def big_matmul(x, w):
+    return pl.pallas_call(
+        _k,
+        grid=(2, 2),
+        in_specs=[pl.BlockSpec((TILE, TILE), lambda i, j: (i, 0)),
+                  pl.BlockSpec((TILE, TILE), lambda i, j: (0, j))],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((2 * TILE, 2 * TILE),
+                                       jnp.float32))(x, w)

@@ -1,0 +1,11 @@
+"""Fixture: emit sites that disagree with EVENT_FIELDS (TRACE001-003)."""
+
+
+class Loop:
+    def __init__(self, obs):
+        self.obs = obs
+
+    def tick(self, n):
+        self.obs.event("bogus_event", tick=n)
+        self.obs.event("decode_tick", tick=n, active=2, surprise=True)
+        self.obs.event("finish", rid=1, tick=n)

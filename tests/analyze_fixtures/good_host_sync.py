@@ -1,0 +1,7 @@
+"""Fixture: a decode body that stays async (no SYNC001)."""
+import jax.numpy as jnp
+
+
+def decode_step(params, cache, tokens):
+    logits = jnp.dot(tokens, params)
+    return jnp.argmax(logits, axis=-1), logits

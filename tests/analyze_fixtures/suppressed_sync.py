@@ -1,0 +1,7 @@
+"""Fixture: an acknowledged sync carrying an inline allow (suppressed)."""
+import numpy as np
+
+
+def decode_step(tokens):
+    # analyze: allow[host-sync] fixture: acknowledged pull overlapped with next tick
+    return np.asarray(tokens)

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.serve.engine import Engine, PagedEngine
+from repro.serve.engine import Engine, PagedEngine  # analyze: allow[deprecated-api] deprecation-pinning test
 
 
 def _ref_generate(model, params, prompt, n):
@@ -185,6 +185,7 @@ def test_rejects_overlong_prompt():
 def test_paged_engine_alias_still_serves():
     """The deprecated PagedEngine alias keeps its old constructor surface."""
     model, params = _tiny()
+    # analyze: allow[deprecated-api] the alias's own regression test
     eng = PagedEngine(model, params, slots=2, max_len=96, block_size=8,
                       prefill_batch=2, prefill_chunk=8)
     req = eng.submit([3, 1, 4], max_tokens=4)

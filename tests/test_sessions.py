@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config
-from repro.models import (
+from repro.models import (  # analyze: allow[deprecated-api] deprecation-pinning test
     FAMILY_BACKENDS,
     SessionSpec,
     build_model,
@@ -110,7 +110,7 @@ def test_session_uniform_surface_shapes():
 def test_get_model_deprecated():
     cfg = _cfg("tinyllama-1.1b")
     with pytest.warns(DeprecationWarning, match="build_model"):
-        model = get_model(cfg)
+        model = get_model(cfg)  # analyze: allow[deprecated-api] asserts the warning itself
     assert model.cfg is cfg
     # the Model protocol no longer carries probe-able paged fields
     assert not hasattr(model, "init_paged_cache")
@@ -190,10 +190,10 @@ def test_int8_cache_rejected_without_scale_support(monkeypatch):
 
 def test_paged_engine_alias_warns():
     from repro.models import build_model as _bm  # noqa: F401  (import guard)
-    from repro.serve.engine import PagedEngine
+    from repro.serve.engine import PagedEngine  # analyze: allow[deprecated-api] deprecation-pinning test
 
     cfg = _cfg("tinyllama-1.1b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     with pytest.warns(DeprecationWarning, match="PagedEngine"):
-        PagedEngine(model, params, slots=2, max_len=32, block_size=4)
+        PagedEngine(model, params, slots=2, max_len=32, block_size=4)  # analyze: allow[deprecated-api] asserts the warning itself
